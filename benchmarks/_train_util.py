@@ -1,0 +1,60 @@
+"""Shared tiny-training harness for the training-artifact benchmarks
+(Fig. 7/8/9): a small in-repo LM fine-tuned for a few steps per 'epoch',
+capturing params / grads / optimizer moments checkpoints."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import DataConfig, make_batch
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import init_train_state, make_train_step
+
+
+def tiny_lm(d_model=192, n_layers=4, vocab=2048):
+    cfg = get_config("repro_gpt_100m").reduced()
+    return dataclasses.replace(
+        cfg, d_model=d_model, n_layers=n_layers, n_heads=4, n_kv_heads=4,
+        head_dim=d_model // 4, d_ff=4 * d_model, vocab_size=vocab,
+    )
+
+
+def train_trajectory(
+    epochs: int = 10, steps_per_epoch: int = 2, seed: int = 0
+) -> Tuple[List[Dict], List[Dict], object]:
+    """Returns (checkpoints, grad_snapshots, model). Each checkpoint is the
+    host pytree of params; grads/moments captured at epoch boundaries."""
+    cfg = tiny_lm()
+    model = build_model(cfg)
+    state = init_train_state(model, jax.random.key(seed))
+    dc = DataConfig(seq_len=128, global_batch=4, seed=seed)
+    # decaying LR like the paper's fine-tuning runs (drives Fig. 8 steps)
+    ocfg = AdamWConfig(lr=3e-3, warmup_steps=2,
+                       total_steps=epochs * steps_per_epoch, min_lr_frac=0.05)
+    step_fn = jax.jit(make_train_step(model, ocfg))
+
+    def grab(tree):
+        return jax.tree_util.tree_map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+    ckpts, grads = [], []
+    k = 0
+    for ep in range(epochs):
+        for _ in range(steps_per_epoch):
+            batch = make_batch(cfg, dc, k)
+            state, metrics = step_fn(state, batch)
+            k += 1
+        ckpts.append(grab(state["params"]))
+        # gradient snapshot: fresh grad at current params
+        batch = make_batch(cfg, dc, k)
+        g = jax.grad(lambda p: model.loss(p, batch)[0])(state["params"])
+        grads.append(
+            {"grads": grab(g), "m": grab(state["opt"]["m"]), "v": grab(state["opt"]["v"])}
+        )
+    return ckpts, grads, model

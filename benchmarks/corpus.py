@@ -1,0 +1,92 @@
+"""Synthetic weight corpus matching the paper's model categories.
+
+No network access ⇒ no Hugging Face downloads.  Each generator reproduces
+the *bit-level statistics* that drive ZipNN (§3): trained-weight exponent
+skew (Gaussian-ish scale mixture ⇒ ~25–45 live exponent values, top-12 ≈
+99.9 % mass — validated against paper Fig. 2 in tests/benchmarks), plus the
+category transformations (rounding, dtype conversion) that create "clean"
+models.  Categories map to the paper's Table 1/2 rows.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import ml_dtypes
+import numpy as np
+
+
+def _trained_like(n: int, seed: int, layers: int = 8) -> np.ndarray:
+    """Scale-mixture Gaussian: different tensors have different init scales
+    (1/sqrt(fan_in)), matching real checkpoints' exponent spread."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    sizes = rng.multinomial(n, np.ones(layers) / layers)
+    for i, sz in enumerate(sizes):
+        scale = float(rng.choice([0.5, 0.1, 0.05, 0.02, 0.01, 0.005]))
+        parts.append(rng.standard_normal(sz).astype(np.float32) * scale)
+    return np.concatenate(parts)
+
+
+def regular_bf16(n: int, seed: int = 0) -> np.ndarray:
+    return _trained_like(n, seed).astype(ml_dtypes.bfloat16)
+
+
+def regular_fp32(n: int, seed: int = 1) -> np.ndarray:
+    return _trained_like(n, seed)
+
+
+def regular_fp16(n: int, seed: int = 2) -> np.ndarray:
+    """llama2-13B-fp16 style: full-precision fp16 weights."""
+    return _trained_like(n, seed).astype(np.float16)
+
+
+def clean_fp32(n: int, seed: int = 3, keep_frac_bits: int = 9) -> np.ndarray:
+    """xlm-roberta style: mantissa truncated after training ⇒ low fraction
+    bytes zero.  Binary truncation (not decimal rounding — decimal snapping
+    collapses values onto a tiny grid and creates whole-float repeats that
+    LZ exploits, which real clean checkpoints don't exhibit)."""
+    w = _trained_like(n, seed)
+    u = w.view(np.uint32)
+    mask = np.uint32(0xFFFFFFFF) << np.uint32(23 - keep_frac_bits)
+    return (u & mask).view(np.float32).copy()
+
+
+def very_clean_fp32(n: int, seed: int = 4) -> np.ndarray:
+    """t5-base style: fp32 upcast from a half-precision original ⇒ the low
+    16 fraction bits are exactly zero."""
+    w = _trained_like(n, seed).astype(ml_dtypes.bfloat16)
+    return np.asarray(w, dtype=np.float32)
+
+
+def clean_fp16(n: int, seed: int = 5) -> np.ndarray:
+    """stable-video-diffusion style: fp16 converted from BF16 ⇒ trailing
+    fraction zeros."""
+    w = _trained_like(n, seed).astype(ml_dtypes.bfloat16)
+    return np.asarray(w, dtype=np.float16)
+
+
+def image_model_fp32(n: int, seed: int = 6) -> np.ndarray:
+    """resnet-like: BN scales/conv filters widen the exponent range a bit
+    (paper Fig. 2: ~50 live exponents vs ~40 for LMs)."""
+    rng = np.random.default_rng(seed)
+    w = _trained_like(n, seed)
+    boost = rng.standard_normal(n // 20).astype(np.float32) * 4.0
+    w[: boost.size] = boost
+    return w
+
+
+CATEGORIES: Dict[str, Tuple[Callable[[int], np.ndarray], str, float]] = {
+    # name: (generator, dtype_name, paper_ratio_pct)
+    "llama3-like (BF16 regular)": (regular_bf16, "bfloat16", 66.4),
+    "olmo-like (FP32 regular)": (regular_fp32, "float32", 83.1),
+    "llama2-like (FP16 regular)": (regular_fp16, "float16", 66.6),
+    "xlm-roberta-like (FP32 clean)": (clean_fp32, "float32", 41.8),
+    "t5-like (FP32 upcast)": (very_clean_fp32, "float32", 33.7),
+    "svd-like (FP16 from BF16)": (clean_fp16, "float16", 84.8),
+    "resnet-like (FP32 image)": (image_model_fp32, "float32", 83.3),
+}
+
+
+def as_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).reshape(-1).view(np.uint8).tobytes()

@@ -1,0 +1,41 @@
+"""Fig. 10: end-to-end hub upload/download times with vs without ZipNN,
+across the paper's measured channel classes."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.checkpoint.hub import CHANNELS, simulate_transfer
+
+from . import corpus
+
+N = 6_000_000
+
+
+def run() -> List[dict]:
+    rows = []
+    models = [
+        ("Llama3-like BF16", corpus.regular_bf16(N), "bfloat16"),
+        ("Olmo-like FP32", corpus.regular_fp32(N), "float32"),
+        ("xlmR-like clean FP32", corpus.clean_fp32(N), "float32"),
+    ]
+    for name, w, dtype in models:
+        raw = corpus.as_bytes(w)
+        for channel in CHANNELS:
+            direction = "upload" if channel.startswith("upload") else "download"
+            rep = simulate_transfer(raw, dtype, channel, direction=direction)
+            rows.append(
+                {
+                    "model": name,
+                    "channel": channel,
+                    "raw_s": round(rep.total_raw_s, 2),
+                    "zipnn_s": round(rep.total_comp_s, 2),
+                    "speedup": round(rep.speedup, 2),
+                }
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,40 @@
+"""Fig. 2: exponent-value histograms — skew statistics across model types.
+
+Paper: ~40 live exponent values for LMs (~50 for image models); top-12
+values ≈ 99.9 % of parameters; distribution nearly identical across models.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import stats
+
+from . import corpus
+
+N = 4_000_000
+
+
+def run() -> List[dict]:
+    rows = []
+    for name, gen in [
+        ("qwen2-vl-like", corpus.regular_bf16),
+        ("llama3-like", lambda n: corpus.regular_bf16(n, seed=11)),
+        ("granite-like", lambda n: corpus.regular_fp32(n, seed=12)),
+        ("resnet-like", corpus.image_model_fp32),
+    ]:
+        h = stats.exponent_histogram(gen(N))
+        rows.append(
+            {
+                "model": name,
+                "distinct_exponents": h["distinct_values"],
+                "top12_mass_pct": round(100 * h["top12_mass"], 2),
+                "exp_range": [h["min_exp"], h["max_exp"]],
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

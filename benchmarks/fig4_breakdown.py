@@ -1,0 +1,44 @@
+"""Fig. 4: contribution breakdown — vanilla LZ+entropy vs exponent
+extraction vs Huffman-only — on BF16 LM-like weights."""
+
+from __future__ import annotations
+
+import zlib
+from typing import List
+
+import numpy as np
+
+from repro.core import baselines, bitlayout, zipnn
+
+from . import corpus
+
+N = 6_000_000
+
+
+def run() -> List[dict]:
+    rows = []
+    for name, seed in [("llama3-like", 0), ("granite-like", 21), ("olmo-like", 22)]:
+        w = corpus.regular_bf16(N, seed=seed)
+        raw = corpus.as_bytes(w)
+        nb = len(raw)
+
+        zl = len(baselines.zlib6(raw))
+        # Huffman-only, no exponent extraction (paper: speed-only win)
+        huff_raw = len(baselines.huffman_only(raw))
+        ee = len(baselines.ee_zlib(raw, "bfloat16"))
+        znn = len(zipnn.compress_bytes(raw, "bfloat16"))
+        rows.append(
+            {
+                "model": name,
+                "zlib_pct": round(100 * zl / nb, 1),
+                "huffman_no_EE_pct": round(100 * huff_raw / nb, 1),
+                "EE_zlib_pct": round(100 * ee / nb, 1),
+                "zipnn_EE_huffman_pct": round(100 * znn / nb, 1),
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,40 @@
+"""Fig. 6: clean FP32 model with vs without byte grouping, with per-fraction
+-byte compressibility breakdown."""
+
+from __future__ import annotations
+
+import zlib
+from typing import List
+
+import numpy as np
+
+from repro.core import zipnn
+
+from . import corpus, table2_ratios
+
+N = 4_000_000
+
+
+def run() -> List[dict]:
+    w = corpus.clean_fp32(N)
+    raw = corpus.as_bytes(w)
+    nb = len(raw)
+    no_bg = len(zlib.compress(raw, 6))                      # no grouping
+    znn = len(zipnn.compress_bytes(raw, "float32"))         # EE + byte groups
+    planes = table2_ratios.plane_breakdown(w)
+    return [
+        {
+            "model": "xlm-roberta-like (clean FP32)",
+            "no_byte_grouping_pct": round(100 * no_bg / nb, 1),
+            "zipnn_byte_grouping_pct": round(100 * znn / nb, 1),
+            "exponent_plane_pct": planes[0],
+            "frac_byte1_pct": planes[1],
+            "frac_byte2_pct": planes[2],
+            "frac_byte3_pct": planes[3],
+        }
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

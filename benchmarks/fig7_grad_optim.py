@@ -1,0 +1,70 @@
+"""Fig. 7: compressibility of model vs gradients vs optimizer moments
+during fine-tuning, with the embedding layer broken out.
+
+Paper findings reproduced: gradients < optimizer < model (compressed size);
+the token-embedding layer of gradients/optimizer is extremely compressible
+(sparse token usage) and prefers the LZ path (zlib) over Huffman."""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import numpy as np
+
+from repro.core import zipnn
+
+from . import _train_util
+
+
+def _ratio_tree(tree, config=zipnn.DEFAULT) -> float:
+    man = zipnn.compress_pytree(tree, config)
+    return round(100.0 * man["comp_bytes"] / max(man["raw_bytes"], 1), 1)
+
+
+def _ratio_arr(arr, config=zipnn.DEFAULT) -> float:
+    a = np.asarray(arr)
+    ct = zipnn.compress_array(a.astype(a.dtype), config)
+    return round(zipnn.ratio(a.nbytes, ct.nbytes), 1)
+
+
+def run() -> List[dict]:
+    ckpts, artifacts, _ = _train_util.train_trajectory(epochs=4, steps_per_epoch=2)
+    params = ckpts[-1]
+    art = artifacts[-1]
+    # bf16 view to match the paper's BF16-RoBERTa setting
+    import ml_dtypes
+
+    def to_bf16(tree):
+        return jax.tree_util.tree_map(
+            lambda a: np.asarray(a, np.float32).astype(ml_dtypes.bfloat16), tree
+        )
+
+    model_r = _ratio_tree(to_bf16(params))
+    grad_r = _ratio_tree(to_bf16(art["grads"]))
+    opt_r = _ratio_tree(to_bf16(art["m"]))
+
+    emb_grad = to_bf16(art["grads"])["embed"]["table"]
+    delta_cfg = zipnn.ZipNNConfig()          # auto Huffman/LZ per chunk
+    emb_grad_zipnn = _ratio_arr(emb_grad)
+    blob_lz = zipnn.compress_bytes(
+        np.ascontiguousarray(emb_grad).reshape(-1).view(np.uint8),
+        "bfloat16", delta_cfg, delta=True,   # delta-mode enables LZ criteria
+    )
+    emb_grad_lz = round(100.0 * len(blob_lz) / emb_grad.nbytes, 1)
+
+    return [
+        {
+            "model_pct": model_r,           # paper ≈ 66
+            "gradients_pct": grad_r,        # paper ≈ 47
+            "optimizer_m_pct": opt_r,       # paper ≈ 54
+            "embedding_grad_huffman_pct": emb_grad_zipnn,
+            "embedding_grad_lz_pct": emb_grad_lz,   # paper: zstd ≪ huffman here
+            "ordering_ok": bool(grad_r < model_r and opt_r < model_r),
+        }
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

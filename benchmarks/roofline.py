@@ -1,0 +1,93 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape) on the single-pod 16×16 mesh, from the
+trip-count-correct accounting numbers (per-device):
+
+    compute    = flops_dev / peak_flops          (197 TF/s bf16, v5e)
+    memory     = bytes_dev / hbm_bw              (819 GB/s)
+    collective = coll_bytes_dev / ici_bw         (3 links × ~50 GB/s ≈ 150)
+
+Dominant term = bottleneck; roofline fraction = compute / max(all terms);
+useful-compute ratio = MODEL_FLOPS / HLO_FLOPS (catches remat/capacity/
+masked-attention overheads)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_PER_LINK = 50e9       # bytes/s per link
+ICI_LINKS = 3                # v5e: 3 usable ICI links per chip (2D torus + pod)
+
+
+def load(dry_dir: str = "experiments/dryrun", mesh: str = "16x16") -> List[Dict]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dry_dir, f"*.{mesh}.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") != "ok" or not r.get("per_device_accounting"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def terms(r: Dict) -> Dict:
+    acct = r["per_device_accounting"]
+    flops = acct["flops"]
+    byts = acct["bytes_accessed"]
+    coll = sum(v for k, v in acct.items() if k.startswith("coll_") and k != "coll_count")
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_n = coll / (ICI_BW_PER_LINK * ICI_LINKS)
+    bound = max(t_c, t_m, t_n)
+    dom = {t_c: "compute", t_m: "memory", t_n: "collective"}[bound]
+    useful = r["model_flops"] / r["chips"] / max(flops, 1.0)
+    mem_gib = r["per_device_memory"]["peak_hint_bytes"] / 2**30
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "kind": r["kind"],
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_n,
+        "dominant": dom,
+        "roofline_frac": t_c / bound if bound else 0.0,
+        "useful_flops_ratio": useful,
+        "hbm_gib_per_dev": mem_gib,
+        "fits_16gib": mem_gib <= 16.0,
+        "compile_s": r["compile_s"],
+    }
+
+
+def run(dry_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = [terms(r) for r in load(dry_dir)]
+    for row in rows:
+        for k in ("compute_s", "memory_s", "collective_s"):
+            row[k] = float(f"{row[k]:.4g}")
+        row["roofline_frac"] = round(row["roofline_frac"], 3)
+        row["useful_flops_ratio"] = round(row["useful_flops_ratio"], 3)
+        row["hbm_gib_per_dev"] = round(row["hbm_gib_per_dev"], 2)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "roofline frac | useful ratio | HBM GiB | fits |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | {r['dominant']} | "
+            f"{r['roofline_frac']:.2f} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['hbm_gib_per_dev']:.2f} | {'y' if r['fits_16gib'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table(run()))

@@ -1,0 +1,107 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark (derived = the
+headline reproduced number), then a detail block per table/figure.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def _runner(name, fn, derive):
+    t0 = time.perf_counter()
+    rows = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"{name},{us:.0f},{derive(rows)}", flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--no-details", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_exponent_hist, fig4_breakdown,
+                            fig6_byte_groups, fig7_grad_optim, fig8_delta,
+                            fig9_periodic_base, fig10_end2end, roofline,
+                            table1_models, table2_ratios, table3_speed)
+
+    benches = {
+        "table1_hub_models": (
+            table1_models.run,
+            lambda rows: f"mean_abs_err_pct={sum(r['abs_err'] for r in rows)/len(rows):.1f}",
+        ),
+        "table2_categories": (
+            table2_ratios.run,
+            lambda rows: "bf16_regular_pct="
+            + str(next(r['ours_pct'] for r in rows if 'BF16 regular' in r['category'])),
+        ),
+        "table3_speed": (
+            table3_speed.run,
+            lambda rows: "zipnn_beats_zlib_ratio_everywhere="
+            + str(all(
+                z["comp_pct"] <= l["comp_pct"]
+                for z, l in zip(
+                    [r for r in rows if r["method"] == "ZipNN"],
+                    [r for r in rows if r["method"] == "zlib(LZ+entropy)"],
+                )
+            )),
+        ),
+        "fig2_exponent_hist": (
+            fig2_exponent_hist.run,
+            lambda rows: f"max_distinct_exponents={max(r['distinct_exponents'] for r in rows)}",
+        ),
+        "fig4_breakdown": (
+            fig4_breakdown.run,
+            lambda rows: f"zipnn_vs_zlib_gain_pct={rows[0]['zlib_pct'] - rows[0]['zipnn_EE_huffman_pct']:.1f}",
+        ),
+        "fig6_byte_groups": (
+            fig6_byte_groups.run,
+            lambda rows: f"bg_gain_pct={rows[0]['no_byte_grouping_pct'] - rows[0]['zipnn_byte_grouping_pct']:.1f}",
+        ),
+        "fig7_grad_optim": (
+            fig7_grad_optim.run,
+            lambda rows: f"ordering_ok={rows[0]['ordering_ok']}",
+        ),
+        "fig8_delta": (
+            fig8_delta.run,
+            lambda rows: f"final_delta_auto_pct={rows[-1]['delta_auto_pct']}",
+        ),
+        "fig9_periodic_base": (
+            fig9_periodic_base.run,
+            lambda rows: f"final_base5_pct={rows[-1]['base5_delta_pct']}",
+        ),
+        "fig10_end2end": (
+            fig10_end2end.run,
+            lambda rows: f"max_speedup={max(r['speedup'] for r in rows):.2f}x",
+        ),
+        "roofline": (
+            roofline.run,
+            lambda rows: f"cells={len(rows)}",
+        ),
+    }
+
+    only = set(args.only.split(",")) if args.only else None
+    all_rows = {}
+    for name, (fn, derive) in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            all_rows[name] = _runner(name, fn, derive)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name},0,ERROR:{type(e).__name__}:{e}", flush=True)
+
+    if not args.no_details:
+        for name, rows in all_rows.items():
+            print(f"\n== {name} ==")
+            for r in rows:
+                print("  " + json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

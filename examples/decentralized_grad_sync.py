@@ -1,0 +1,31 @@
+"""Decentralized training gradient exchange with ZipNN (paper §2.1.2):
+compress the gradient pytree before it crosses the slow inter-site link.
+
+    PYTHONPATH=src python examples/decentralized_grad_sync.py
+"""
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig, make_batch
+from repro.distributed.grad_sync import GradSync
+from repro.models import build_model
+
+
+def main():
+    cfg = get_config("repro_gpt_100m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, DataConfig(seq_len=128, global_batch=4), 0)
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+
+    gs = GradSync()
+    for peers, gbps in [(4, 1.0), (16, 1.0), (16, 10.0)]:
+        rep = gs.exchange(grads, n_peers=peers, link_gbps=gbps)
+        print(f"peers={peers:3d} link={gbps:4.0f}Gb/s  "
+              f"raw={rep['raw_s']*1e3:7.1f}ms  zipnn={rep['zipnn_s']*1e3:7.1f}ms  "
+              f"payload={rep['ratio_pct']:.1f}%  (lossless ✓)")
+
+
+if __name__ == "__main__":
+    main()

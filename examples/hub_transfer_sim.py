@@ -1,0 +1,29 @@
+"""Model-hub transfer with ZipNN (paper §2.1.1 + Fig. 10): how much wire
+time does lossless compression save on upload/download?
+
+    PYTHONPATH=src python examples/hub_transfer_sim.py
+"""
+
+import ml_dtypes
+import numpy as np
+
+from repro.checkpoint.hub import CHANNELS, simulate_transfer
+
+
+def main():
+    rng = np.random.default_rng(0)
+    model = (rng.standard_normal(8_000_000) * 0.02).astype(ml_dtypes.bfloat16)
+    raw = np.ascontiguousarray(model).view(np.uint8).tobytes()
+    print(f"model: {len(raw)/1e6:.0f} MB BF16 (regular category)\n")
+    print(f"{'channel':26s} {'raw s':>8s} {'zipnn s':>8s} {'speedup':>8s}")
+    for ch in CHANNELS:
+        direction = "upload" if ch.startswith("upload") else "download"
+        rep = simulate_transfer(raw, "bfloat16", ch, direction=direction)
+        print(f"{ch:26s} {rep.total_raw_s:8.1f} {rep.total_comp_s:8.1f} "
+              f"{rep.speedup:7.2f}x")
+    print("\n(compression ratio "
+          f"{100*rep.comp_bytes/rep.raw_bytes:.1f}% — paper: ~66% for BF16)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: compress a model with ZipNN, verify losslessness, see where
+the savings come from.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.core import stats, zipnn
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def main():
+    # 1. A real (reduced) model from the zoo
+    cfg = get_config("yi_6b").reduced()
+    params = build_model(cfg).init(jax.random.key(0))
+
+    # 2. Compress the whole pytree
+    manifest = zipnn.compress_pytree(params)
+    print(f"raw   : {manifest['raw_bytes']/1e6:8.2f} MB")
+    print(f"zipnn : {manifest['comp_bytes']/1e6:8.2f} MB "
+          f"({100*manifest['comp_bytes']/manifest['raw_bytes']:.1f}% — "
+          f"paper BF16 models: ~66%)")
+
+    # 3. Losslessness
+    back = zipnn.decompress_pytree(manifest)
+    for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(back)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    print("round-trip: bit-exact ✓")
+
+    # 4. Why it compresses: the exponent byte is skewed (paper Fig. 2)
+    w = np.asarray(jax.device_get(params["layers"]["mlp"]["w_gate"])).astype(
+        ml_dtypes.bfloat16
+    )
+    h = stats.exponent_histogram(w)
+    print(f"exponent: {h['distinct_values']} distinct values, "
+          f"top-12 cover {100*h['top12_mass']:.2f}% of weights")
+    rep = stats.plane_report(w)
+    print(f"plane entropies (bits/byte): exponent={rep[0]['entropy_bits']:.2f} "
+          f"fraction={rep[1]['entropy_bits']:.2f}  → only the exponent compresses")
+
+    # 5. Delta compression (paper §4.2): a fine-tuning step away
+    w2 = np.asarray(w, np.float32)
+    idx = np.random.default_rng(0).integers(0, w2.size, w2.size // 50)
+    w2.reshape(-1)[idx] *= 1.01
+    w2 = w2.astype(ml_dtypes.bfloat16)
+    d = zipnn.delta_compress(w2, w)
+    print(f"delta of a 2%-changed tensor: {100*d.nbytes/w.nbytes:.1f}% "
+          "(vs ~66% standalone)")
+
+
+if __name__ == "__main__":
+    main()

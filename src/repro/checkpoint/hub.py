@@ -1,0 +1,76 @@
+"""Model-hub transfer simulation (paper §5.3, Fig. 10).
+
+Models the paper's measured channel classes (first download / cached
+download / upload, cloud vs home) and reports end-to-end time with and
+without ZipNN: transfer(compressed) + decompress vs transfer(raw).
+Compression/decompression times are *measured* on this host; only the wire
+time is modeled — same methodology as the paper, which also separates the
+two terms."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import zipnn
+
+# Channel bandwidths (MB/s) — paper §5.3 measurements.
+CHANNELS: Dict[str, float] = {
+    "upload_cloud": 20.0,
+    "first_download_cloud": 30.0,
+    "cached_download_cloud": 125.0,
+    "first_download_home": 10.0,
+    "cached_download_home": 40.0,
+}
+
+
+@dataclasses.dataclass
+class TransferReport:
+    channel: str
+    raw_bytes: int
+    comp_bytes: int
+    wire_raw_s: float
+    wire_comp_s: float
+    codec_s: float
+
+    @property
+    def total_raw_s(self) -> float:
+        return self.wire_raw_s
+
+    @property
+    def total_comp_s(self) -> float:
+        return self.wire_comp_s + self.codec_s
+
+    @property
+    def speedup(self) -> float:
+        return self.total_raw_s / max(self.total_comp_s, 1e-9)
+
+
+def simulate_transfer(
+    data: bytes,
+    dtype_name: str,
+    channel: str,
+    *,
+    direction: str = "download",
+    config: zipnn.ZipNNConfig = zipnn.DEFAULT,
+) -> TransferReport:
+    bw = CHANNELS[channel] * 1e6
+    t0 = time.perf_counter()
+    blob = zipnn.compress_bytes(data, dtype_name, config)
+    t_comp = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    back = zipnn.decompress_bytes(blob, config)
+    t_dec = time.perf_counter() - t0
+    assert back == bytes(data), "hub transfer must be lossless"
+    codec = t_comp if direction == "upload" else t_dec
+    return TransferReport(
+        channel=channel,
+        raw_bytes=len(data),
+        comp_bytes=len(blob),
+        wire_raw_s=len(data) / bw,
+        wire_comp_s=len(blob) / bw,
+        codec_s=codec,
+    )

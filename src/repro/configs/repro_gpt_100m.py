@@ -1,0 +1,19 @@
+"""repro-gpt-100m — in-repo ~100 M-param LM for the end-to-end training
+driver and checkpoint/delta experiments (the paper's own evaluation uses
+off-the-shelf checkpoints; this is our trainable stand-in)."""
+
+from .base import ModelConfig, register
+
+register(ModelConfig(
+    name="repro_gpt_100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=32000,
+    head_dim=64,
+    remat="none",
+    source="in-repo",
+))

@@ -1,0 +1,30 @@
+"""ZipNN core: lossless compression tailored to AI models (the paper's
+primary contribution), plus the baselines it is evaluated against."""
+
+from .bitlayout import BitLayout, LAYOUTS, layout_for, to_planes, from_planes, exponent_view
+from .codec import CodecParams, Method, longest_zero_run
+from .zipnn import (
+    ZipNNConfig,
+    CompressedTensor,
+    compress_array,
+    decompress_array,
+    compress_bytes,
+    decompress_bytes,
+    compress_pytree,
+    decompress_pytree,
+    delta_compress,
+    delta_decompress,
+    ratio,
+)
+from .stats import byte_entropy, exponent_histogram, plane_report, classify_model
+from . import baselines
+
+__all__ = [
+    "BitLayout", "LAYOUTS", "layout_for", "to_planes", "from_planes",
+    "exponent_view", "CodecParams", "Method", "longest_zero_run",
+    "ZipNNConfig", "CompressedTensor", "compress_array", "decompress_array",
+    "compress_bytes", "decompress_bytes", "compress_pytree",
+    "decompress_pytree", "delta_compress", "delta_decompress", "ratio",
+    "byte_entropy", "exponent_histogram", "plane_report", "classify_model",
+    "baselines",
+]

@@ -1,0 +1,88 @@
+"""Baseline compressors the paper compares ZipNN against.
+
+The paper's baseline family is "LZ + entropy" (zstd, zlib) and "fast LZ"
+(lz4, snappy).  Offline container has no zstd/lz4 binaries, so:
+
+  * ``zstd``-class LZ+entropy  → zlib level 6        (same family, §2.3)
+  * ``zstd -1``-class          → zlib level 1
+  * fast-LZ (lz4/snappy) proxy → zlib level 1 w/ Z_FILTERED (match-light)
+  * zstd's Huffman-only path   → zlib Z_HUFFMAN_ONLY
+  * EE+Zstd (paper Table 3)    → exponent extraction + zlib on each plane
+
+All functions return (compressed_bytes, seconds) so speed tables can be
+built uniformly.
+"""
+
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from . import bitlayout
+
+__all__ = ["BASELINES", "run_baseline", "ee_zlib"]
+
+
+def _timed(fn: Callable[[bytes], bytes], data: bytes) -> Tuple[bytes, float]:
+    t0 = time.perf_counter()
+    out = fn(data)
+    return out, time.perf_counter() - t0
+
+
+def zlib6(data: bytes) -> bytes:
+    return zlib.compress(data, 6)
+
+
+def zlib1(data: bytes) -> bytes:
+    return zlib.compress(data, 1)
+
+
+def huffman_only(data: bytes) -> bytes:
+    co = zlib.compressobj(6, zlib.DEFLATED, -15, 9, zlib.Z_HUFFMAN_ONLY)
+    return co.compress(data) + co.flush()
+
+
+def fast_lz(data: bytes) -> bytes:
+    co = zlib.compressobj(1, zlib.DEFLATED, -15, 9, zlib.Z_FILTERED)
+    return co.compress(data) + co.flush()
+
+
+def ee_zlib(data: bytes, dtype_name: str, level: int = 6) -> bytes:
+    """Exponent-Extraction + zlib per plane (paper Table 3's 'EE+Zstd')."""
+    layout = bitlayout.layout_for(dtype_name)
+    buf = np.frombuffer(data, dtype=np.uint8)
+    tail = buf.size % layout.itemsize
+    body = buf[: buf.size - tail] if tail else buf
+    planes = bitlayout.to_planes(body, layout)
+    blobs = [zlib.compress(p.tobytes(), level) for p in planes]
+    out = b"".join(len(b).to_bytes(8, "little") + b for b in blobs)
+    if tail:
+        out += bytes(buf[buf.size - tail :])
+    return out
+
+
+BASELINES: Dict[str, Callable[[bytes], bytes]] = {
+    "zlib": zlib6,
+    "zlib-1": zlib1,
+    "huffman-only(zlib)": huffman_only,
+    "fast-lz": fast_lz,
+}
+
+
+def run_baseline(name: str, data: bytes) -> Tuple[int, float]:
+    """Returns (compressed_size_bytes, seconds)."""
+    out, dt = _timed(BASELINES[name], data)
+    return len(out), dt
+
+
+def decompress_time(name: str, data: bytes) -> Tuple[bytes, float]:
+    comp = BASELINES[name](data)
+    t0 = time.perf_counter()
+    if name in ("huffman-only(zlib)", "fast-lz"):
+        out = zlib.decompress(comp, -15)
+    else:
+        out = zlib.decompress(comp)
+    return out, time.perf_counter() - t0

@@ -1,0 +1,168 @@
+"""Floating-point bit layouts and the exponent-extraction transform.
+
+ZipNN's first key mechanism (paper §3.1, Fig. 3) is *exponent extraction*:
+the exponent bits of each parameter are separated from the sign/fraction
+bits so that the highly-skewed exponent distribution can be entropy coded
+on its own stream.
+
+For the IEEE-ish layouts used by models::
+
+    FP32:  [ s | e e e e e e e e | f*23 ]          (1, 8, 23)
+    BF16:  [ s | e e e e e e e e | f*7  ]          (1, 8, 7)
+    FP16:  [ s | e e e e e | f*10 ]                (1, 5, 10)
+
+the exponent does not live on a byte boundary — the sign bit sits above it.
+We therefore apply a *rotate-left-by-1* to the underlying uint before byte
+splitting.  After rotation the most-significant byte of a BF16/FP32 value is
+the pure 8-bit exponent and the sign bit is appended as the LSB of the last
+byte.  The rotation is a bijection on the uint domain, hence lossless, and
+costs one shift+or per element.
+
+Byte grouping (paper §3.2, Fig. 5) then splits the (rotated) values into
+per-byte planes: plane 0 = exponent byte, planes 1..k = fraction bytes.
+Each plane is compressed independently.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BitLayout",
+    "LAYOUTS",
+    "layout_for",
+    "to_planes",
+    "from_planes",
+    "exponent_view",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class BitLayout:
+    """Describes how a parameter dtype maps onto byte-group planes."""
+
+    name: str
+    itemsize: int              # bytes per parameter
+    uint_dtype: np.dtype       # unsigned container dtype
+    sign_bits: int
+    exp_bits: int
+    frac_bits: int
+    rotate: bool               # apply rotate-left-1 so plane0 == exponent
+
+    @property
+    def total_bits(self) -> int:
+        return 8 * self.itemsize
+
+    @property
+    def n_planes(self) -> int:
+        return self.itemsize
+
+
+_LAYOUT_FP32 = BitLayout("fp32", 4, np.dtype(np.uint32), 1, 8, 23, True)
+_LAYOUT_BF16 = BitLayout("bf16", 2, np.dtype(np.uint16), 1, 8, 7, True)
+_LAYOUT_FP16 = BitLayout("fp16", 2, np.dtype(np.uint16), 1, 5, 10, True)
+_LAYOUT_FP64 = BitLayout("fp64", 8, np.dtype(np.uint64), 1, 11, 52, True)
+# Integer / quantized tensors: plain byte grouping, no rotation (there is no
+# exponent; paper §3: "tensors of parameters that contain integers ... hardly
+# affect the model compression ratio" — we still byte-group them).
+_LAYOUT_U8 = BitLayout("u8", 1, np.dtype(np.uint8), 0, 0, 8, False)
+_LAYOUT_I32 = BitLayout("i32", 4, np.dtype(np.uint32), 0, 0, 32, False)
+_LAYOUT_I64 = BitLayout("i64", 8, np.dtype(np.uint64), 0, 0, 64, False)
+_LAYOUT_U16 = BitLayout("u16", 2, np.dtype(np.uint16), 0, 0, 16, False)
+
+LAYOUTS: Dict[str, BitLayout] = {
+    "float32": _LAYOUT_FP32,
+    "bfloat16": _LAYOUT_BF16,
+    "float16": _LAYOUT_FP16,
+    "float64": _LAYOUT_FP64,
+    "uint8": _LAYOUT_U8,
+    "int8": _LAYOUT_U8,
+    "bool": _LAYOUT_U8,
+    "int32": _LAYOUT_I32,
+    "uint32": _LAYOUT_I32,
+    "int64": _LAYOUT_I64,
+    "uint64": _LAYOUT_I64,
+    "int16": _LAYOUT_U16,
+    "uint16": _LAYOUT_U16,
+}
+
+
+def layout_for(dtype_name: str) -> BitLayout:
+    """Layout for a dtype name ('bfloat16', 'float32', ...)."""
+    try:
+        return LAYOUTS[dtype_name]
+    except KeyError:
+        raise ValueError(f"no ZipNN bit layout for dtype {dtype_name!r}") from None
+
+
+def _rotl1(u: np.ndarray, bits: int) -> np.ndarray:
+    return ((u << 1) | (u >> (bits - 1))).astype(u.dtype)
+
+
+def _rotr1(u: np.ndarray, bits: int) -> np.ndarray:
+    return ((u >> 1) | (u << (bits - 1))).astype(u.dtype)
+
+
+def to_planes(raw: np.ndarray, layout: BitLayout) -> Tuple[np.ndarray, ...]:
+    """Split a flat uint8 buffer of parameters into byte-group planes.
+
+    ``raw`` is the little-endian byte view of the tensor, length divisible by
+    ``layout.itemsize``.  Returns ``layout.n_planes`` uint8 arrays, plane 0
+    being the (pure, if ``layout.rotate``) exponent byte — most significant
+    byte after rotation — matching paper Fig. 3/Fig. 5.
+    """
+    if raw.dtype != np.uint8:
+        raise TypeError("to_planes expects a uint8 byte view")
+    if raw.size % layout.itemsize:
+        raise ValueError(
+            f"buffer of {raw.size} bytes is not a multiple of itemsize {layout.itemsize}"
+        )
+    if layout.itemsize == 1:
+        return (np.ascontiguousarray(raw),)
+    u = raw.view(layout.uint_dtype)
+    if layout.rotate:
+        u = _rotl1(u, layout.total_bits)
+    # Big-endian byte split: plane 0 = MSB (exponent after rotation).
+    # Strided views over the little-endian byte image — one memcpy per plane
+    # instead of shift+mask+downcast per plane.
+    bytes_le = u.view(np.uint8).reshape(-1, layout.itemsize)
+    return tuple(
+        np.ascontiguousarray(bytes_le[:, layout.itemsize - 1 - i])
+        for i in range(layout.itemsize)
+    )
+
+
+def from_planes(planes: Tuple[np.ndarray, ...], layout: BitLayout) -> np.ndarray:
+    """Inverse of :func:`to_planes` — returns the flat uint8 byte view."""
+    if len(planes) != layout.n_planes:
+        raise ValueError(f"expected {layout.n_planes} planes, got {len(planes)}")
+    if layout.itemsize == 1:
+        return np.ascontiguousarray(planes[0])
+    n = planes[0].size
+    bytes_le = np.empty((n, layout.itemsize), dtype=np.uint8)
+    for i, p in enumerate(planes):
+        bytes_le[:, layout.itemsize - 1 - i] = p
+    u = bytes_le.reshape(-1).view(layout.uint_dtype)
+    if layout.rotate:
+        u = _rotr1(u, layout.total_bits)
+    return u.view(np.uint8)
+
+
+def exponent_view(arr: np.ndarray) -> np.ndarray:
+    """Return the biased exponent of every element of a float array.
+
+    Used by the Fig. 2 benchmark (exponent histograms) and by entropy probes.
+    """
+    name = arr.dtype.name
+    layout = layout_for(name)
+    if layout.exp_bits == 0:
+        raise ValueError(f"dtype {name} has no exponent")
+    u = np.ascontiguousarray(arr).view(layout.uint_dtype)
+    shift = layout.frac_bits
+    mask = (1 << layout.exp_bits) - 1
+    return ((u >> np.asarray(shift, dtype=u.dtype)) & np.asarray(mask, dtype=u.dtype)).astype(
+        np.int32
+    )

@@ -1,0 +1,109 @@
+"""Compressibility statistics: exponent histograms, entropy, categories.
+
+Backs the paper's analysis figures (Fig. 2 exponent skew, Fig. 6 per-group
+breakdown) and the model-category classifier ("regular" vs "clean", §3).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List
+
+import numpy as np
+
+from . import bitlayout
+
+__all__ = [
+    "byte_entropy",
+    "exponent_histogram",
+    "plane_report",
+    "classify_model",
+]
+
+
+def byte_entropy(data: np.ndarray) -> float:
+    """Shannon entropy (bits/byte) of a uint8 stream."""
+    if data.size == 0:
+        return 0.0
+    hist = np.bincount(data, minlength=256).astype(np.float64)
+    p = hist[hist > 0] / data.size
+    return float(-(p * np.log2(p)).sum())
+
+
+def exponent_histogram(arr: np.ndarray) -> Dict[str, Any]:
+    """Fig. 2: distribution of biased exponent values."""
+    exps = bitlayout.exponent_view(arr)
+    hist = np.bincount(exps.ravel(), minlength=256)
+    nz = np.nonzero(hist)[0]
+    top = np.argsort(hist)[::-1]
+    total = hist.sum()
+    top12 = float(hist[top[:12]].sum() / max(total, 1))
+    return {
+        "hist": hist,
+        "distinct_values": int(nz.size),
+        "top12_mass": top12,
+        "min_exp": int(nz.min()) if nz.size else 0,
+        "max_exp": int(nz.max()) if nz.size else 0,
+    }
+
+
+def plane_report(arr: np.ndarray) -> List[Dict[str, float]]:
+    """Per-byte-group entropy + implied Huffman ratio (Fig. 6 style)."""
+    a = np.ascontiguousarray(arr)
+    layout = bitlayout.layout_for(a.dtype.name)
+    planes = bitlayout.to_planes(a.view(np.uint8).reshape(-1), layout)
+    out = []
+    for i, p in enumerate(planes):
+        h = byte_entropy(p)
+        out.append(
+            {
+                "plane": i,
+                "entropy_bits": h,
+                "est_ratio_pct": 100.0 * h / 8.0,
+                "zero_frac": float((p == 0).mean()) if p.size else 0.0,
+            }
+        )
+    return out
+
+
+def classify_model(tree_leaves: List[np.ndarray]) -> str:
+    """'clean' if fraction planes show real compressibility, else 'regular'.
+
+    Paper §3: clean models (rounded / type-converted post-training) compress
+    in the fraction too; regular models only in the exponent.  We sample the
+    fraction planes of the largest leaves and look at byte entropy.
+    """
+    frac_entropy = []
+    leaves = sorted(tree_leaves, key=lambda a: -a.size)[:8]
+    for a in leaves:
+        a = np.ascontiguousarray(a)
+        try:
+            layout = bitlayout.layout_for(a.dtype.name)
+        except ValueError:
+            continue
+        if layout.exp_bits == 0 or a.size < 1024:
+            continue
+        planes = bitlayout.to_planes(a.view(np.uint8).reshape(-1), layout)
+        for p in planes[1:]:
+            sample = p[: 1 << 20]
+            frac_entropy.append(byte_entropy(sample))
+    if not frac_entropy:
+        return "regular"
+    # any fraction plane with < 7.2 bits/byte of entropy ⇒ compressible ⇒ clean
+    return "clean" if min(frac_entropy) < 7.2 else "regular"
+
+
+def theoretical_ratio(arr: np.ndarray) -> float:
+    """Entropy-bound compressed size (%) with byte grouping — sanity bound."""
+    rep = plane_report(arr)
+    return sum(r["est_ratio_pct"] for r in rep) / max(len(rep), 1)
+
+
+def gib(n_bytes: int) -> float:
+    return n_bytes / float(1 << 30)
+
+
+def human_gbps(n_bytes: int, seconds: float) -> float:
+    if seconds <= 0:
+        return math.inf
+    return n_bytes / seconds / 1e9

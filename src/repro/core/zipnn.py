@@ -1,0 +1,238 @@
+"""ZipNN public API: lossless compression tailored to model weights.
+
+Pipeline per tensor (paper §3):
+
+    raw bytes ──rotate+byte-group──▶ planes ──chunk──▶ probe ──▶ entropy code
+                                     │                     │
+                                     └ plane 0 = exponent  └ STORE/ZERO/HUFF/ZLIB
+
+Entry points:
+  * :func:`compress_array` / :func:`decompress_array` — one numpy/JAX array.
+  * :func:`compress_bytes` / :func:`decompress_bytes` — raw streams with an
+    explicit dtype interpretation.
+  * :func:`compress_pytree` / :func:`decompress_pytree` — whole model /
+    optimizer states; returns a manifest + per-leaf blobs.
+  * :func:`delta_compress` / :func:`delta_decompress` — §4.2 XOR deltas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import bitlayout, codec, container
+
+__all__ = [
+    "ZipNNConfig",
+    "CompressedTensor",
+    "compress_array",
+    "decompress_array",
+    "compress_bytes",
+    "decompress_bytes",
+    "compress_pytree",
+    "decompress_pytree",
+    "delta_compress",
+    "delta_decompress",
+    "compressed_size",
+    "ratio",
+]
+
+
+@dataclasses.dataclass
+class ZipNNConfig:
+    """User-facing knobs (defaults = paper defaults)."""
+
+    chunk_param_bytes: int = 1 << 18     # 256 KiB of parameters per chunk
+    # Entropy backend. Both are Huffman-only coders (the ZipNN algorithm);
+    # 'hufflib' uses zlib's C Huffman (as the paper used zstd's C Huffman)
+    # for production speed, 'huffman' is our from-scratch vectorized
+    # canonical coder (algorithm reference + Pallas-kernel oracle).
+    backend: str = "hufflib"
+    incompressible: float = 0.98
+    skip_chunks: int = 8
+    zlib_level: int = 6
+
+    def plane_params(self, itemsize: int, delta: bool = False) -> codec.CodecParams:
+        return codec.CodecParams(
+            chunk_bytes=max(1, self.chunk_param_bytes // max(itemsize, 1)),
+            incompressible=self.incompressible,
+            skip_chunks=self.skip_chunks,
+            delta_mode=delta,
+            backend=self.backend,
+            zlib_level=self.zlib_level,
+        )
+
+
+DEFAULT = ZipNNConfig()
+
+
+@dataclasses.dataclass
+class CompressedTensor:
+    """A compressed leaf: blob + enough info to restore dtype/shape."""
+
+    blob: bytes
+    dtype: str
+    shape: Tuple[int, ...]
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.blob)
+
+
+# ---------------------------------------------------------------------------
+# byte-stream compression
+# ---------------------------------------------------------------------------
+
+def compress_bytes(
+    raw: bytes | np.ndarray,
+    dtype_name: str,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    delta: bool = False,
+) -> bytes:
+    """Compress a raw little-endian byte stream interpreted as ``dtype_name``."""
+    buf = np.frombuffer(raw, dtype=np.uint8) if isinstance(raw, (bytes, memoryview, bytearray)) else np.ascontiguousarray(raw, dtype=np.uint8)
+    layout = bitlayout.layout_for(dtype_name)
+    tail = buf.size % layout.itemsize
+    body, rem = (buf[: buf.size - tail], buf[buf.size - tail :]) if tail else (buf, None)
+    planes = bitlayout.to_planes(body, layout)
+    params = config.plane_params(layout.itemsize, delta)
+
+    tables: List[Optional[bytes]] = []
+    entries: List[List[codec.ChunkEntry]] = []
+    payloads: List[List[bytes]] = []
+    for plane in planes:
+        e, p, t = codec.compress_plane(plane, params)
+        entries.append(e)
+        payloads.append(p)
+        tables.append(t)
+    blob = container.pack_stream(
+        layout.name, body.size, params.chunk_bytes, tables, entries, payloads,
+        delta=delta,
+    )
+    if rem is not None and rem.size:
+        blob += b"TAIL" + bytes(rem)
+    return blob
+
+
+def decompress_bytes(blob: bytes, config: ZipNNConfig = DEFAULT) -> bytes:
+    meta, mv = container.unpack_stream(blob)
+    layout = next(l for l in bitlayout.LAYOUTS.values() if l.name == meta.layout_name)
+    params = codec.CodecParams(chunk_bytes=meta.chunk_bytes, backend=config.backend)
+    planes = []
+    for p in range(meta.n_planes):
+        payload_list = [
+            container.payload_view(meta, mv, p, c)
+            for c in range(len(meta.entries[p]))
+        ]
+        planes.append(
+            codec.decompress_plane(meta.entries[p], payload_list, meta.tables[p], params)
+        )
+    body = bitlayout.from_planes(tuple(planes), layout)
+    # trailing unaligned bytes
+    end = meta.payload_base + sum(
+        e.comp_len for pe in meta.entries for e in pe
+    )
+    tail = blob[end:]
+    if tail[:4] == b"TAIL":
+        return body.tobytes() + tail[4:]
+    return body.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# array / pytree compression
+# ---------------------------------------------------------------------------
+
+def _to_numpy(arr: Any) -> np.ndarray:
+    if hasattr(arr, "addressable_data"):      # jax.Array → host
+        arr = np.asarray(arr)
+    shape = np.shape(arr)
+    # ascontiguousarray promotes 0-d → 1-d; restore the true shape
+    return np.ascontiguousarray(arr).reshape(shape)
+
+
+def compress_array(arr: Any, config: ZipNNConfig = DEFAULT) -> CompressedTensor:
+    a = _to_numpy(arr)
+    blob = compress_bytes(a.reshape(-1).view(np.uint8), a.dtype.name, config)
+    return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
+
+
+def decompress_array(ct: CompressedTensor, config: ZipNNConfig = DEFAULT) -> np.ndarray:
+    raw = decompress_bytes(ct.blob, config)
+    import ml_dtypes  # registered with numpy by jax
+
+    dtype = np.dtype(getattr(ml_dtypes, ct.dtype, ct.dtype))
+    return np.frombuffer(raw, dtype=dtype).reshape(ct.shape).copy()
+
+
+def compress_pytree(tree: Any, config: ZipNNConfig = DEFAULT) -> Dict[str, Any]:
+    """Compress every leaf of a pytree. Returns a manifest dict."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    comp = [compress_array(l, config) for l in leaves]
+    return {
+        "treedef": treedef,
+        "leaves": comp,
+        "raw_bytes": sum(int(np.asarray(l).nbytes) for l in leaves),
+        "comp_bytes": sum(c.nbytes for c in comp),
+    }
+
+
+def decompress_pytree(manifest: Dict[str, Any], config: ZipNNConfig = DEFAULT) -> Any:
+    import jax
+
+    leaves = [decompress_array(c, config) for c in manifest["leaves"]]
+    return jax.tree_util.tree_unflatten(manifest["treedef"], leaves)
+
+
+# ---------------------------------------------------------------------------
+# delta compression (§4.2)
+# ---------------------------------------------------------------------------
+
+def delta_compress(
+    new: Any, base: Any, config: ZipNNConfig = DEFAULT
+) -> CompressedTensor:
+    """XOR-delta two same-shape tensors and compress the delta stream.
+
+    XOR is used (not subtraction) because it is exactly reversible with no
+    extra bits (paper §4.2).  The delta stream is byte-grouped like a normal
+    tensor — Fig. 8(b) shows per-byte-group change rates differ, so grouping
+    helps deltas too — and the §4.2 Huffman/LZ auto-selection runs per chunk.
+    """
+    a = _to_numpy(new)
+    b = _to_numpy(base)
+    if a.shape != b.shape or a.dtype != b.dtype:
+        raise ValueError("delta requires matching shape/dtype")
+    x = np.bitwise_xor(a.reshape(-1).view(np.uint8), b.reshape(-1).view(np.uint8))
+    blob = compress_bytes(x, a.dtype.name, config, delta=True)
+    return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
+
+
+def delta_decompress(
+    ct: CompressedTensor, base: Any, config: ZipNNConfig = DEFAULT
+) -> np.ndarray:
+    b = _to_numpy(base)
+    x = np.frombuffer(decompress_bytes(ct.blob, config), dtype=np.uint8)
+    raw = np.bitwise_xor(x, b.reshape(-1).view(np.uint8))
+    import ml_dtypes
+
+    dtype = np.dtype(getattr(ml_dtypes, ct.dtype, ct.dtype))
+    return np.frombuffer(raw.tobytes(), dtype=dtype).reshape(ct.shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def compressed_size(manifest_or_ct: Any) -> int:
+    if isinstance(manifest_or_ct, CompressedTensor):
+        return manifest_or_ct.nbytes
+    return manifest_or_ct["comp_bytes"]
+
+
+def ratio(raw_bytes: int, comp_bytes: int) -> float:
+    """Compressed size in percent — lower is better (paper's metric)."""
+    return 100.0 * comp_bytes / max(raw_bytes, 1)

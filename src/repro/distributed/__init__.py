@@ -1,0 +1,6 @@
+"""Distribution substrate: logical-axis sharding rules, cross-pod gradient
+sync with ZipNN compression, elastic re-sharding helpers."""
+
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the ZipNN compression hot path.
+
+Kernels (each: <name>.py kernel + ref.py oracle + ops.py wrapper):
+  * bytegroup — exponent-extraction / byte-group transform (Fig. 3/5)
+  * histogram — 256-bin byte histogram (table building, probes)
+  * bitpack   — parallel Huffman bit-packing (encode hot loop)
+  * xor_delta — checkpoint XOR delta + changed-byte count (§4.2)
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode against the pure-jnp oracles.
+"""
+
+from . import ops, ref
+from .ops import (
+    bytegroup_bf16,
+    ungroup_bf16,
+    bytegroup_fp32,
+    ungroup_fp32,
+    byte_histogram,
+    xor_delta_u32,
+    huffman_encode_chunks,
+)
+
+__all__ = [
+    "ops", "ref", "bytegroup_bf16", "ungroup_bf16", "bytegroup_fp32",
+    "ungroup_fp32", "byte_histogram", "xor_delta_u32", "huffman_encode_chunks",
+]

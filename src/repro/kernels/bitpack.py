@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: parallel Huffman bit-packing (the encode hot loop).
+
+CPU Huffman encoders emit bits serially into an accumulator — there is no
+TPU analogue of that loop.  The TPU-native formulation (DESIGN.md §3) is
+*gather-based stream compaction*:
+
+  1. gather per-symbol (code, length) from the 256-entry canonical table;
+  2. inclusive prefix-sum of lengths → every symbol's output bit interval
+     (the VPU scan is the only cross-lane dependency);
+  3. for every *output* bit ``j``, binary-search the producing symbol in the
+     cumulative-lengths vector and gather bit ``j - start[s]`` of its
+     left-aligned code field — a pure parallel gather;
+  4. reduce groups of 32 bits into uint32 words with a power-of-two
+     weighted sum (VPU multiply-add).
+
+One grid step packs one 256 KiB-format chunk, so the kernel's parallelism
+matches the container's parallel-decode metadata map.  Output capacity per
+chunk equals the raw size: chunks that would expand are stored raw by the
+host (the codec's expansion guard), so no dynamic shapes are needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MAXL = 15
+
+
+def _bitpack_kernel(syms_ref, len_ref, code_ref, words_ref, nbits_ref):
+    syms = syms_ref[...].reshape(-1).astype(jnp.int32)
+    n = syms.shape[0]
+    lens = len_ref[...][syms]
+    codes = code_ref[...][syms]
+    ends = jnp.cumsum(lens)
+    nbits = ends[n - 1]
+    starts = ends - lens
+
+    cap_bits = 8 * n
+    j = jax.lax.iota(jnp.int32, cap_bits)
+    s = jnp.searchsorted(ends, j, side="right").astype(jnp.int32)
+    s = jnp.minimum(s, n - 1)
+    b = j - starts[s]
+    field = codes[s] << (MAXL - lens[s])
+    bit = (field >> (MAXL - 1 - b)) & 1
+    bit = jnp.where(j < nbits, bit, 0)
+
+    # Weighted reduce in two exact int32 halves (≤ 2^16 each), then splice.
+    pow16 = 1 << (15 - jax.lax.iota(jnp.int32, 16))
+    groups = bit.reshape(-1, 32)
+    hi = jnp.sum(groups[:, :16] * pow16[None, :], axis=1)
+    lo = jnp.sum(groups[:, 16:] * pow16[None, :], axis=1)
+    words_ref[...] = ((hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32))
+    nbits_ref[0] = nbits
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_syms", "interpret"))
+def bitpack_encode_chunks(
+    syms: jax.Array,
+    len_table: jax.Array,
+    code_table: jax.Array,
+    *,
+    chunk_syms: int = 1 << 13,
+    interpret: bool = True,
+):
+    """uint8[C*chunk_syms] → (uint32[C, chunk_syms/4], int32[C]).
+
+    ``chunk_syms`` symbols per grid step (per container chunk).  Returns
+    packed words (raw-size capacity) and true bit counts per chunk.
+    """
+    n = syms.shape[0]
+    assert n % chunk_syms == 0, "pad to whole chunks on the host"
+    c = n // chunk_syms
+    words, nbits = pl.pallas_call(
+        _bitpack_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((chunk_syms,), lambda i: (i,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+            pl.BlockSpec((256,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk_syms // 4,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c * (chunk_syms // 4),), jnp.uint32),
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(syms, len_table.astype(jnp.int32), code_table.astype(jnp.int32))
+    return words.reshape(c, chunk_syms // 4), nbits

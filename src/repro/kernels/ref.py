@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for the ZipNN Pallas kernels.
+
+Every kernel in this package has its reference semantics defined here, in
+plain ``jnp`` ops on whole arrays.  Kernel tests sweep shapes/dtypes and
+``assert_allclose`` (exact equality — these are bit-manipulation ops)
+against these functions, with the Pallas kernels running in interpret mode.
+
+Semantics notes
+---------------
+* ``bytegroup_*``: rotate-left-1 on the scalar's uint image, then split into
+  byte planes MSB-first — plane 0 is the pure biased exponent for
+  BF16/FP32 (paper Fig. 3/5).  Mirrors ``core.bitlayout``.
+* ``histogram``: 256-bin byte histogram (int32 counts).
+* ``bitpack_encode``: two-pass parallel Huffman packing.  For each output
+  bit ``j``, the producing symbol is found with a monotone searchsorted over
+  the cumulative code lengths, then the bit is gathered from the symbol's
+  left-aligned code field.  MSB-first within each 32-bit word, words
+  concatenated big-endian — byte-identical to ``np.packbits`` of the bit
+  string (and to ``core.huffman.encode``).
+* ``xor_delta``: elementwise XOR (+ count of changed bytes per call, the
+  Fig. 8(a) statistic).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+MAXL = 15  # max Huffman code length (core.huffman.MAX_CODE_LEN)
+
+
+# ---------------------------------------------------------------------------
+# byte grouping / exponent extraction
+# ---------------------------------------------------------------------------
+
+def bytegroup_bf16(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """uint16[N] -> (exponent uint8[N], frac|sign uint8[N])."""
+    x = x.astype(jnp.uint16)
+    rot = ((x << 1) | (x >> 15)).astype(jnp.uint16)
+    return (rot >> 8).astype(jnp.uint8), (rot & 0xFF).astype(jnp.uint8)
+
+
+def ungroup_bf16(exp: jnp.ndarray, frac: jnp.ndarray) -> jnp.ndarray:
+    rot = (exp.astype(jnp.uint16) << 8) | frac.astype(jnp.uint16)
+    return ((rot >> 1) | (rot << 15)).astype(jnp.uint16)
+
+
+def bytegroup_fp32(x: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """uint32[N] -> 4 uint8[N] planes, plane 0 = exponent."""
+    x = x.astype(jnp.uint32)
+    rot = ((x << 1) | (x >> 31)).astype(jnp.uint32)
+    return tuple(
+        ((rot >> (8 * (3 - i))) & 0xFF).astype(jnp.uint8) for i in range(4)
+    )
+
+
+def ungroup_fp32(*planes: jnp.ndarray) -> jnp.ndarray:
+    rot = jnp.zeros_like(planes[0], dtype=jnp.uint32)
+    for i, p in enumerate(planes):
+        rot = rot | (p.astype(jnp.uint32) << (8 * (3 - i)))
+    return ((rot >> 1) | (rot << 31)).astype(jnp.uint32)
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+
+def histogram(x: jnp.ndarray) -> jnp.ndarray:
+    """uint8[...] -> int32[256] counts."""
+    x = x.reshape(-1).astype(jnp.int32)
+    bins = jnp.arange(256, dtype=jnp.int32)
+    return jnp.sum(
+        (x[None, :] == bins[:, None]).astype(jnp.int32), axis=1
+    )
+
+
+# ---------------------------------------------------------------------------
+# Huffman bit-pack
+# ---------------------------------------------------------------------------
+
+def bitpack_encode(
+    syms: jnp.ndarray, len_table: jnp.ndarray, code_table: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pack Huffman codes of ``syms`` into 32-bit words.
+
+    Args:
+      syms: uint8[N] symbols.
+      len_table: int32[256] code lengths (1..15; 0 = absent symbol).
+      code_table: int32[256] canonical code values.
+
+    Returns:
+      words: uint32[ceil(8*N/32)] — capacity equals the raw size; if the
+        encoding would exceed it (incompressible chunk — the host stores raw
+        in that case, mirroring the codec's expansion guard), the tail is
+        truncated.
+      nbits: int32[] — true number of encoded bits.
+    """
+    n = syms.shape[0]
+    syms_i = syms.astype(jnp.int32)
+    lens = len_table[syms_i]
+    codes = code_table[syms_i]
+    ends = jnp.cumsum(lens)                     # inclusive prefix sum
+    nbits = ends[-1] if n else jnp.int32(0)
+    starts = ends - lens
+
+    cap_bits = 8 * n                            # == raw size capacity
+    j = jnp.arange(cap_bits, dtype=jnp.int32)
+    s = jnp.searchsorted(ends, j, side="right").astype(jnp.int32)
+    s = jnp.minimum(s, n - 1)
+    b = j - starts[s]                           # bit index within the code
+    field = (codes[s] << (MAXL - lens[s])).astype(jnp.int32)
+    bit = (field >> (MAXL - 1 - b)) & 1
+    bit = jnp.where(j < nbits, bit, 0)
+
+    # Exact int32 reduce in two 16-bit halves, spliced into a uint32 word.
+    pow16 = 1 << (15 - jnp.arange(16, dtype=jnp.int32))
+    groups = bit.reshape(-1, 32)
+    hi = jnp.sum(groups[:, :16] * pow16[None, :], axis=1)
+    lo = jnp.sum(groups[:, 16:] * pow16[None, :], axis=1)
+    words = (hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32)
+    return words, jnp.asarray(nbits, dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# XOR delta
+# ---------------------------------------------------------------------------
+
+def xor_delta(a: jnp.ndarray, b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(uint32[N], uint32[N]) -> (delta uint32[N], changed-byte count int32)."""
+    d = jnp.bitwise_xor(a.astype(jnp.uint32), b.astype(jnp.uint32))
+    changed = jnp.zeros((), jnp.int32)
+    for k in range(4):
+        changed = changed + jnp.sum(((d >> (8 * k)) & 0xFF) != 0, dtype=jnp.int32)
+    return d, changed

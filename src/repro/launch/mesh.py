@@ -1,0 +1,39 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — device count is locked on first jax init, and
+only launch/dryrun.py (which sets XLA_FLAGS first) may build the 512-way
+placeholder topology.
+"""
+
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)                 # 256 chips (v5e pod slice)
+MULTI_POD = (2, 16, 16)               # 2 pods × 256 = 512 chips
+
+
+def _mk(shape, axes):
+    # pin Auto axis types: the jax 0.9 default flips to Explicit
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD if multi_pod else SINGLE_POD
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke paths."""
+    return _mk((1, 1), ("data", "model"))
+
+
+def n_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,11 @@
+"""Composable pure-JAX model zoo for the assigned architectures.
+
+Families: dense decoder LMs (GQA/SWA/QKV-bias), MoE (top-k, sorted capacity
+dispatch), MLA (DeepSeek-V2), SSM (Mamba2 SSD), hybrid (Zamba2), encoder-only
+(HuBERT), VLM backbone (Qwen2-VL with M-RoPE).  All layers scan-stacked for
+bounded compile time; sharding via logical-axis PartitionSpec rules.
+"""
+
+from .model import Model, build_model
+
+__all__ = ["Model", "build_model"]

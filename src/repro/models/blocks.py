@@ -1,0 +1,140 @@
+"""Transformer / Mamba block composition: init + train apply + decode apply.
+
+Blocks are pure functions over plain-dict params so layer stacks can be
+jax.vmap-initialized and lax.scan-applied (bounded compile time at 60–81
+layers).  Every block returns ``(x, aux)`` in training (aux = MoE load
+balancing loss, 0 elsewhere).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, moe, ssm
+
+Array = jax.Array
+
+
+def _norm_init(cfg, d=None):
+    d = d or cfg.d_model
+    return (layers.init_layernorm if cfg.norm == "layernorm" else layers.init_rmsnorm)(
+        d, cfg.dtype
+    )
+
+
+def norm_apply(cfg, p, x):
+    fn = layers.layernorm if cfg.norm == "layernorm" else layers.rmsnorm
+    return fn(p, x, cfg.norm_eps)
+
+
+def _mlp_init(cfg, key, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    if cfg.mlp == "gelu":
+        return layers.init_gelu_mlp(key, cfg.d_model, d_ff, cfg.dtype)
+    return layers.init_swiglu(key, cfg.d_model, d_ff, cfg.dtype)
+
+
+def mlp_apply(cfg, p, x):
+    return (layers.gelu_mlp if cfg.mlp == "gelu" else layers.swiglu)(p, x)
+
+
+# ---------------------------------------------------------------------------
+# dense transformer block (GQA or MLA attention + MLP)
+# ---------------------------------------------------------------------------
+
+def init_dense_block(key, cfg, d_ff=None):
+    k1, k2 = jax.random.split(key)
+    attn_init = attention.init_mla if cfg.mla else attention.init_gqa
+    return {
+        "attn_norm": _norm_init(cfg),
+        "attn": attn_init(k1, cfg),
+        "mlp_norm": _norm_init(cfg),
+        "mlp": _mlp_init(cfg, k2, d_ff),
+    }
+
+
+def dense_block_train(p, x, cfg, positions, pos_thw=None):
+    h = norm_apply(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        a = attention.mla_train(p["attn"], h, cfg, positions)
+    else:
+        a = attention.gqa_train(p["attn"], h, cfg, positions, pos_thw)
+    x = x + a
+    h = norm_apply(cfg, p["mlp_norm"], x)
+    x = x + mlp_apply(cfg, p["mlp"], h)
+    return x, jnp.zeros((), jnp.float32)
+
+
+def dense_block_decode(p, x, caches, pos, cfg):
+    h = norm_apply(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        a, ckv, kr = attention.mla_decode(p["attn"], h, caches[0], caches[1], pos, cfg)
+        new_caches = (ckv, kr)
+    else:
+        a, ck, cv = attention.gqa_decode(p["attn"], h, caches[0], caches[1], pos, cfg)
+        new_caches = (ck, cv)
+    x = x + a
+    h = norm_apply(cfg, p["mlp_norm"], x)
+    x = x + mlp_apply(cfg, p["mlp"], h)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# MoE block (attention + routed experts)
+# ---------------------------------------------------------------------------
+
+def init_moe_block(key, cfg):
+    k1, k2 = jax.random.split(key)
+    attn_init = attention.init_mla if cfg.mla else attention.init_gqa
+    return {
+        "attn_norm": _norm_init(cfg),
+        "attn": attn_init(k1, cfg),
+        "mlp_norm": _norm_init(cfg),
+        "moe": moe.init_moe(k2, cfg),
+    }
+
+
+def moe_block_train(p, x, cfg, positions, pos_thw=None):
+    h = norm_apply(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        a = attention.mla_train(p["attn"], h, cfg, positions)
+    else:
+        a = attention.gqa_train(p["attn"], h, cfg, positions, pos_thw)
+    x = x + a
+    h = norm_apply(cfg, p["mlp_norm"], x)
+    y, aux = moe.moe_apply(p["moe"], h, cfg)
+    return x + y, aux
+
+
+def moe_block_decode(p, x, caches, pos, cfg):
+    h = norm_apply(cfg, p["attn_norm"], x)
+    if cfg.mla:
+        a, c0, c1 = attention.mla_decode(p["attn"], h, caches[0], caches[1], pos, cfg)
+    else:
+        a, c0, c1 = attention.gqa_decode(p["attn"], h, caches[0], caches[1], pos, cfg)
+    x = x + a
+    h = norm_apply(cfg, p["mlp_norm"], x)
+    y, _ = moe.moe_apply(p["moe"], h, cfg)
+    return x + y, (c0, c1)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg):
+    return {"norm": _norm_init(cfg), "mamba": ssm.init_mamba2(key, cfg)}
+
+
+def mamba_block_train(p, x, cfg, positions=None, pos_thw=None):
+    h = norm_apply(cfg, p["norm"], x)
+    return x + ssm.mamba2_train(p["mamba"], h, cfg), jnp.zeros((), jnp.float32)
+
+
+def mamba_block_decode(p, x, caches, pos, cfg):
+    h = norm_apply(cfg, p["norm"], x)
+    y, state, conv = ssm.mamba2_decode(p["mamba"], h, caches[0], caches[1], cfg)
+    return x + y, (state, conv)

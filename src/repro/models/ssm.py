@@ -1,0 +1,196 @@
+"""Mamba2 (SSD — state-space duality) block: chunked training scan and
+recurrent decode.
+
+Training uses the SSD chunked algorithm (Dao & Gu 2024): the sequence is
+split into chunks of ``ssd_chunk``; within a chunk the quadratic "attention
+form" runs (MXU-friendly), across chunks a linear recurrence on the (H, P, N)
+state carries context — O(S·Q) instead of O(S²).  Decode is the pure
+recurrence: state ← state·exp(dtA) + dt·x⊗B, y = C·state — O(1) per token,
+which is what makes the 500 k-token decode cell feasible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": layers.init_dense(
+            k1, d, 2 * d_inner + 2 * N + H, cfg.dtype
+        ),
+        "conv": {
+            "w": (jax.random.normal(k2, (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1
+                  ).astype(cfg.dtype),
+            "b": jnp.zeros((conv_dim,), cfg.dtype),
+        },
+        "ssm": {
+            "A_log": jnp.log(
+                jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+            ).astype(jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "dt_bias": jnp.zeros((H,), jnp.float32),
+        },
+        "norm": layers.init_rmsnorm(d_inner, cfg.dtype),
+        "out_proj": layers.init_dense(k4, d_inner, d, cfg.dtype),
+    }
+
+
+def _split_proj(p, x, cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    zxbcdt = layers.dense(p["in_proj"], x)
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, xin, Bc, Cc, dt, d_inner, H, N
+
+
+def _causal_conv(p, u: Array) -> Array:
+    """Depthwise causal conv via shifted adds (width is tiny, e.g. 4)."""
+    w = p["w"].astype(jnp.float32)
+    width = w.shape[0]
+    uf = u.astype(jnp.float32)
+    y = jnp.zeros_like(uf)
+    for i in range(width):
+        shift = width - 1 - i
+        ui = jnp.pad(uf, ((0, 0), (shift, 0), (0, 0)))[:, : uf.shape[1]]
+        y = y + ui * w[i][None, None, :]
+    return jax.nn.silu(y + p["b"].astype(jnp.float32)).astype(u.dtype)
+
+
+def ssd_scan(
+    xh: Array, dt: Array, A: Array, Bc: Array, Cc: Array, D: Array, chunk: int
+) -> Array:
+    """Chunked SSD. xh: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) < 0;
+    Bc, Cc: (B,S,N) (single group); D: (H,). Returns (B,S,H,P)."""
+    Bsz, S, H, P = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bcc = Bc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Ccc = Cc.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (quadratic within Q). Mask *before* exp: upper-triangle
+    # segments are positive and would overflow to inf, which turns the
+    # where() gradient into NaN (valid entries are always ≤ 0).
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -jnp.inf)
+    L = jnp.exp(seg)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Ccc, Bcc)      # (B,nc,Q,Q)
+    att = scores[..., None] * L * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", att, xc)
+
+    # chunk states: (B,nc,H,P,N)
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bckn,bckh,bckhp->bchpn", Bcc, dtc * decay_out, xc
+    )
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))            # (B,nc,H)
+
+    def step(s, inp):
+        st_c, dec_c = inp
+        s_new = s * dec_c[:, :, None, None] + st_c
+        return s_new, s                                    # emit state *before* chunk
+
+    s0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, s_prev = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev, 0, 1)                   # (B,nc,H,P,N)
+
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp", Ccc, s_prev, jnp.exp(cum)
+    )
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, P)[:, :S]
+    return (y + xh[:, :S].astype(jnp.float32) * D[None, None, :, None]).astype(
+        jnp.bfloat16
+    )
+
+
+def mamba2_train(p, x: Array, cfg) -> Array:
+    """Full Mamba2 mixer over (B, S, D)."""
+    z, xin, Bc, Cc, dt, d_inner, H, N = _split_proj(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(p["conv"], conv_in)
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    A = -jnp.exp(p["ssm"]["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["ssm"]["dt_bias"][None, None, :])
+    xh = xin.reshape(*xin.shape[:2], H, cfg.ssm_head_dim)
+    y = ssd_scan(xh, dt, A, Bc, Cc, p["ssm"]["D"], cfg.ssd_chunk)
+    y = y.reshape(*x.shape[:2], d_inner)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype))
+    return layers.dense(p["out_proj"], y)
+
+
+class SSMCache(NamedTuple):
+    state: Array      # (B, H, P, N) fp32
+    conv: Array       # (B, width-1, conv_dim)
+
+
+def init_ssm_cache(cfg, batch: int, n_layers: int) -> SSMCache:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_head_dim
+    N = cfg.ssm_state
+    conv_dim = d_inner + 2 * N
+    return SSMCache(
+        jnp.zeros((n_layers, batch, H, cfg.ssm_head_dim, N), jnp.float32),
+        jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim), jnp.bfloat16),
+    )
+
+
+def mamba2_decode(p, x: Array, state: Array, conv_cache: Array, cfg):
+    """One-token recurrent step. x: (B, 1, D); state: (B,H,P,N);
+    conv_cache: (B, width-1, conv_dim). Returns (y, state, conv_cache)."""
+    z, xin, Bc, Cc, dt, d_inner, H, N = _split_proj(p, x, cfg)
+    u = jnp.concatenate([xin, Bc, Cc], axis=-1)[:, 0]      # (B, conv_dim)
+    w = p["conv"]["w"].astype(jnp.float32)
+    width = w.shape[0]
+    hist = jnp.concatenate([conv_cache.astype(jnp.float32),
+                            u.astype(jnp.float32)[:, None]], axis=1)  # (B,w,conv)
+    conv_out = jnp.sum(hist * w[None, :, :], axis=1) + p["conv"]["b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    conv_cache = hist[:, 1:].astype(conv_cache.dtype)
+
+    xin, Bc, Cc = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    A = -jnp.exp(p["ssm"]["A_log"])
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["ssm"]["dt_bias"][None, :])
+    dA = jnp.exp(dtv * A[None, :])                        # (B, H)
+    xh = xin.reshape(-1, H, cfg.ssm_head_dim)              # (B,H,P)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dtv, Bc, xh)
+    state = state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, Cc)
+    y = y + xh * p["ssm"]["D"][None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(jnp.bfloat16)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(jnp.bfloat16))
+    return layers.dense(p["out_proj"], y), state, conv_cache

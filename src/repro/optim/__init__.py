@@ -1,0 +1,3 @@
+from .adamw import AdamWConfig, init_opt_state, apply_updates, lr_schedule
+
+__all__ = ["AdamWConfig", "init_opt_state", "apply_updates", "lr_schedule"]

@@ -1,0 +1,3 @@
+from .step import decode_state_specs, make_serve_step, make_prefill
+
+__all__ = ["decode_state_specs", "make_serve_step", "make_prefill"]

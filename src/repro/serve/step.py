@@ -1,0 +1,145 @@
+"""Serving: prefill + single-token decode with sharded caches.
+
+Cache sharding policy (decode cells):
+  * batch axis → 'data' when divisible (decode_32k: 128/16 ✓; long_500k has
+    batch 1 → replicated over data, noted in EXPERIMENTS.md);
+  * kv-head axis → 'model' when divisible (MQA granite kv=1 → replicated;
+    its head_dim shards instead);
+  * MLA latent dim → 'model' (contraction-sharded attention, partial-sum
+    all-reduce inserted by GSPMD);
+  * SSM state heads → 'model' when divisible.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.model import Model
+
+PyTree = Any
+
+
+def _div(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def inference_param_specs(model: Model, mesh) -> PyTree:
+    """Serving-time parameter layout (§Perf: decode is not ZeRO-3 country).
+
+    Dense/attention weights: TP over 'model', replicated over 'data' —
+    per-layer ZeRO-3 all-gathers amortize over training batches but cost
+    GiBs per decoded token.  Experts: E over 'data' × ff over 'model' so
+    expert weights never move; the tiny decode token buffers all-to-all
+    instead."""
+    import jax.tree_util as jtu
+
+    base = model.param_specs(mesh)          # includes zero3 if cfg.zero3
+    cfg = model.cfg
+
+    def one(path_tuple, leaf, spec):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        nd = leaf.ndim
+        if "experts/" in path and cfg.n_experts:
+            e_ax = "data" if _div(cfg.n_experts, mesh, "data") else None
+            f_ax = "model" if _div(cfg.moe_d_ff, mesh, "model") else None
+            pad = [None] * (nd - 3)
+            if path.endswith("w_down"):
+                return P(*(pad + [e_ax, f_ax, None]))
+            return P(*(pad + [e_ax, None, f_ax]))
+        # strip the zero3 ('data') axis everywhere else
+        return P(*[None if ax == "data" else ax for ax in (list(spec) + [None] * nd)[:nd]])
+
+    abstract = model.abstract_params()
+    return jtu.tree_map_with_path(
+        lambda p, l, s: one(p, l, s), abstract, base
+    )
+
+
+def decode_state_specs(model: Model, state_tree: PyTree, mesh) -> PyTree:
+    cfg = model.cfg
+
+    def one(path_tuple, leaf):
+        path = "/".join(str(getattr(k, "key", k)) for k in path_tuple)
+        nd = leaf.ndim
+        if path.endswith("pos"):
+            return P()
+        shape = leaf.shape
+        if "kv_" in path:
+            # (L, B, Lc, G, hd).  Preference order for the 'model' axis:
+            # kv heads when they divide, else the CACHE LENGTH dim —
+            # length-sharded decode keeps the score einsum local and
+            # combines softmax via tiny stat all-reduces.  Sharding head_dim
+            # forces XLA into involuntary full-cache all-gathers
+            # (§Perf cell 2: 2.5 GiB × n_layers per step before this).
+            b = "data" if _div(shape[1], mesh, "data") else None
+            if _div(shape[3], mesh, "model"):
+                return P(None, b, None, "model", None)
+            if _div(shape[2], mesh, "model"):
+                return P(None, b, "model", None, None)
+            hd = "model" if _div(shape[4], mesh, "model") else None
+            return P(None, b, None, None, hd)
+        if "mla_" in path:
+            # (L, B, Lc, r) — shard the cache length; sharding the latent r
+            # makes every layer's score einsum a (B,H,Lc)-sized partial-sum
+            # all-reduce (§Perf cell 1/2 finding).
+            b = "data" if _div(shape[1], mesh, "data") else None
+            if _div(shape[2], mesh, "model"):
+                return P(None, b, "model", None)
+            r = "model" if _div(shape[3], mesh, "model") else None
+            return P(None, b, None, r)
+        if "ssm_state" in path:
+            # (L[, G], B, H, P, N)
+            b = "data" if _div(shape[-4], mesh, "data") else None
+            h = "model" if _div(shape[-3], mesh, "model") else None
+            return P(*([None] * (nd - 4) + [b, h, None, None]))
+        if "ssm_conv" in path:
+            b = "data" if _div(shape[-3], mesh, "data") else None
+            c = "model" if _div(shape[-1], mesh, "model") else None
+            return P(*([None] * (nd - 3) + [b, None, c]))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(one, state_tree)
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, state, tokens) → (logits, state)."""
+
+    def serve_step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    return serve_step
+
+
+def make_prefill(model: Model) -> Callable:
+    """prefill(params, batch) → logits for the full prompt (chunked attn)."""
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits
+
+    return prefill
+
+
+def greedy_generate(
+    model: Model, params, prompt, steps: int
+) -> Tuple[Any, Any]:
+    """Small-scale generation loop for examples/tests (feeds tokens one by
+    one through the decode step; caches sized for prompt+steps)."""
+    import jax.numpy as jnp
+
+    B, S = prompt.shape
+    state = model.init_decode_state(B, S + steps, start_pos=0)
+    step = jax.jit(model.decode_step)
+    logits = None
+    for t in range(S):
+        logits, state = step(params, state, prompt[:, t : t + 1])
+    out = []
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        out.append(tok)
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    return jnp.concatenate(out, axis=1), state

@@ -1,0 +1,88 @@
+"""Byte-group / exponent-extraction transform tests (paper §3.1, Fig. 3/5)."""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitlayout
+
+DTYPES = ["float32", "bfloat16", "float16", "float64", "int32", "uint8"]
+
+
+@pytest.mark.parametrize("dtype_name", DTYPES)
+@pytest.mark.parametrize("n", [0, 1, 7, 128, 4096, 65537])
+def test_roundtrip(dtype_name, n):
+    layout = bitlayout.layout_for(dtype_name)
+    rng = np.random.default_rng(42 + n)
+    raw = rng.integers(0, 256, n * layout.itemsize, dtype=np.uint8)
+    planes = bitlayout.to_planes(raw, layout)
+    assert len(planes) == layout.n_planes
+    assert all(p.size == n for p in planes)
+    back = bitlayout.from_planes(planes, layout)
+    np.testing.assert_array_equal(back, raw)
+
+
+def test_bf16_plane0_is_pure_exponent():
+    """After rotation, plane 0 of BF16 must be exactly the biased exponent."""
+    rng = np.random.default_rng(0)
+    w = (rng.standard_normal(10000) * 0.05).astype(ml_dtypes.bfloat16)
+    raw = np.ascontiguousarray(w).view(np.uint8)
+    layout = bitlayout.layout_for("bfloat16")
+    planes = bitlayout.to_planes(raw, layout)
+    np.testing.assert_array_equal(
+        planes[0].astype(np.int32), bitlayout.exponent_view(w)
+    )
+
+
+def test_fp32_plane0_is_pure_exponent():
+    rng = np.random.default_rng(1)
+    w = (rng.standard_normal(10000) * 0.05).astype(np.float32)
+    layout = bitlayout.layout_for("float32")
+    planes = bitlayout.to_planes(np.ascontiguousarray(w).view(np.uint8), layout)
+    np.testing.assert_array_equal(
+        planes[0].astype(np.int32), bitlayout.exponent_view(w)
+    )
+
+
+def test_sign_preserved():
+    w = np.array([1.5, -1.5, 0.0, -0.0, 3e-40, -3e-40], dtype=np.float32)
+    layout = bitlayout.layout_for("float32")
+    back = bitlayout.from_planes(
+        bitlayout.to_planes(w.view(np.uint8), layout), layout
+    )
+    np.testing.assert_array_equal(back.view(np.float32), w)
+    # signs live in the LSB of the last plane after rotation
+    planes = bitlayout.to_planes(w.view(np.uint8), layout)
+    np.testing.assert_array_equal(planes[-1] & 1, [0, 1, 0, 1, 0, 1])
+
+
+@given(st.binary(min_size=0, max_size=4096))
+@settings(max_examples=50, deadline=None)
+def test_roundtrip_property_fp32(data):
+    layout = bitlayout.layout_for("float32")
+    n = len(data) - len(data) % 4
+    raw = np.frombuffer(data[:n], dtype=np.uint8)
+    back = bitlayout.from_planes(bitlayout.to_planes(raw, layout), layout)
+    np.testing.assert_array_equal(back, raw)
+
+
+def test_special_values_roundtrip():
+    specials = np.array(
+        [np.nan, np.inf, -np.inf, 0.0, -0.0, np.finfo(np.float32).tiny,
+         np.finfo(np.float32).max, -np.finfo(np.float32).max],
+        dtype=np.float32,
+    )
+    layout = bitlayout.layout_for("float32")
+    back = bitlayout.from_planes(
+        bitlayout.to_planes(specials.view(np.uint8), layout), layout
+    ).view(np.float32)
+    np.testing.assert_array_equal(back.view(np.uint32), specials.view(np.uint32))
+
+
+def test_rejects_misaligned():
+    layout = bitlayout.layout_for("float32")
+    with pytest.raises(ValueError):
+        bitlayout.to_planes(np.zeros(7, dtype=np.uint8), layout)
+    with pytest.raises(TypeError):
+        bitlayout.to_planes(np.zeros(8, dtype=np.int16), layout)

@@ -1,0 +1,124 @@
+"""Dry-run machinery tests: collective parser, input specs, shape-cell
+applicability, and one real (subprocess) lower+compile on the production
+mesh."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, shape_cells
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestCollectiveParser:
+    def _parse(self, text):
+        from repro.launch import dryrun
+
+        return dryrun.collective_bytes(text)
+
+    def test_basic_ops(self):
+        hlo = """
+  %all-reduce.1 = f32[128,64]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[2048,512]{1,0} all-gather(%p), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[16,8]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[4,4]<=[16], to_apply=%add
+  %cp = u8[1000]{0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1}}
+"""
+        out = self._parse(hlo)
+        assert out["all-reduce"] == 2 * 128 * 64 * 4
+        assert out["all-gather"] == 2048 * 512 * 2
+        assert out["reduce-scatter"] == 16 * 8 * 4 * 3     # gs=4 → ×3
+        assert out["collective-permute"] == 1000
+        assert out["count"] == 4
+
+    def test_async_pairs_count_once(self):
+        hlo = """
+  %ags = (f32[8]{0}, f32[128]{0}) all-gather-start(%p), channel_id=1, replica_groups=[1,16]<=[16], dimensions={0}
+  %agd = f32[128]{0} all-gather-done(%ags)
+"""
+        out = self._parse(hlo)
+        assert out["all-gather"] == 128 * 4
+        assert out["count"] == 1
+
+    def test_non_collectives_ignored(self):
+        out = self._parse("  %f = f32[10]{0} fusion(%a), kind=kLoop\n")
+        assert out["count"] == 0
+
+
+class TestCellApplicability:
+    def test_encoder_skips_decode(self):
+        cells = [c.name for c in shape_cells(get_config("hubert_xlarge"))]
+        assert cells == ["train_4k", "prefill_32k"]
+
+    def test_full_attention_skips_500k(self):
+        for arch in ["yi_6b", "granite_20b", "qwen15_4b", "olmoe_1b_7b",
+                     "deepseek_v2_236b", "qwen2_vl_2b"]:
+            cells = [c.name for c in shape_cells(get_config(arch))]
+            assert "long_500k" not in cells, arch
+            assert "decode_32k" in cells, arch
+
+    def test_subquadratic_runs_500k(self):
+        for arch in ["mamba2_130m", "zamba2_7b", "h2o_danube3_4b"]:
+            cells = [c.name for c in shape_cells(get_config(arch))]
+            assert "long_500k" in cells, arch
+
+    def test_total_cell_count(self):
+        total = sum(len(shape_cells(get_config(a))) for a in list_archs())
+        assert total == 32          # 40 nominal − 6 long_500k − 2 encoder decode
+
+
+class TestInputSpecs:
+    def test_train_specs_shapes(self):
+        from repro.launch.dryrun import input_specs
+
+        specs = input_specs("yi_6b", "train_4k")
+        assert specs["batch"]["tokens"].shape == (256, 4096)
+        n_params = sum(
+            int(__import__("math").prod(l.shape))
+            for l in jax.tree_util.tree_leaves(specs["state"]["params"])
+        )
+        assert 5.5e9 < n_params < 7.5e9
+
+    def test_decode_specs_cache(self):
+        from repro.launch.dryrun import input_specs
+
+        specs = input_specs("yi_6b", "decode_32k")
+        assert specs["tokens"].shape == (128, 1)
+        assert specs["dstate"]["kv_k"].shape == (32, 128, 32768, 4, 128)
+
+    def test_swa_decode_cache_is_window_bounded(self):
+        from repro.launch.dryrun import input_specs
+
+        specs = input_specs("h2o_danube3_4b", "long_500k")
+        # SWA ⇒ ring cache of window size, not 524288
+        assert specs["dstate"]["kv_k"].shape[2] == 8192
+
+    def test_mla_decode_caches_latent(self):
+        from repro.launch.dryrun import input_specs
+
+        specs = input_specs("deepseek_v2_236b", "decode_32k")
+        assert specs["dstate"]["mla_ckv"].shape == (60, 128, 32768, 512)
+        assert specs["dstate"]["mla_kr"].shape == (60, 128, 32768, 64)
+
+
+@pytest.mark.slow
+def test_one_real_dryrun_cell(tmp_path):
+    """End-to-end: lower+compile mamba2 decode on the 16×16 production mesh
+    in a subprocess (the only place 512 placeholder devices exist)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2_130m",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, r.stdout + r.stderr
+    fn = tmp_path / "mamba2_130m.decode_32k.16x16.json"
+    data = json.loads(fn.read_text())
+    assert data["status"] == "ok"
+    assert data["chips"] == 256
+    assert data["per_device_accounting"]["flops"] > 0

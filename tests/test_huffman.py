@@ -1,0 +1,141 @@
+"""Canonical length-limited Huffman codec tests (paper §3.1 'Huffman only')."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import huffman
+
+
+def _roundtrip(data: np.ndarray):
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    codes = huffman.canonical_codes(lens)
+    blob = huffman.encode(data, lens, codes)
+    back = huffman.decode(blob, data.size, lens)
+    np.testing.assert_array_equal(back, data)
+    return blob, lens
+
+
+def test_kraft_inequality_and_limit():
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        # extremely skewed histograms push plain Huffman past the limit
+        freqs = np.zeros(256, dtype=np.int64)
+        k = rng.integers(2, 256)
+        freqs[:k] = np.maximum(1, (1 << (np.arange(k) % 40)).astype(np.int64))
+        lens = huffman.code_lengths(freqs)
+        used = lens[lens > 0]
+        assert used.max() <= huffman.MAX_CODE_LEN
+        kraft = np.sum(2.0 ** (-used.astype(np.float64)))
+        assert kraft <= 1.0 + 1e-12
+
+
+def test_canonical_codes_prefix_free():
+    freqs = np.array([1000, 500, 200, 90, 8, 1, 1, 1] + [0] * 248, dtype=np.int64)
+    lens = huffman.code_lengths(freqs)
+    codes = huffman.canonical_codes(lens)
+    pairs = [(int(codes[s]), int(lens[s])) for s in range(256) if lens[s]]
+    for (c1, l1) in pairs:
+        for (c2, l2) in pairs:
+            if (c1, l1) == (c2, l2):
+                continue
+            if l1 <= l2:
+                assert (c2 >> (l2 - l1)) != c1, "prefix violation"
+
+
+def test_table_pack_roundtrip():
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 40, 10000).astype(np.uint8)
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    assert np.array_equal(huffman.unpack_table(huffman.pack_table(lens)), lens)
+
+
+@pytest.mark.parametrize("n", [1, 2, 255, 4096, 100_000])
+def test_roundtrip_skewed(n):
+    rng = np.random.default_rng(n)
+    p = np.r_[np.full(12, 0.08), np.full(244, 0.04 / 244)]
+    data = rng.choice(256, p=p / p.sum(), size=n).astype(np.uint8)
+    blob, lens = _roundtrip(data)
+    # skewed data must actually compress
+    if n >= 4096:
+        assert len(blob) < 0.7 * n
+
+
+def test_roundtrip_uniform_and_constant():
+    rng = np.random.default_rng(7)
+    _roundtrip(rng.integers(0, 256, 10000).astype(np.uint8))
+    _roundtrip(np.full(5000, 173, dtype=np.uint8))
+    _roundtrip(np.array([0], dtype=np.uint8))
+
+
+def test_encode_chunks_matches_per_chunk_encode():
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 16, 50_000).astype(np.uint8)
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    codes = huffman.canonical_codes(lens)
+    counts = np.array([20_000, 25_000, 5_000])
+    blobs = huffman.encode_chunks(data, counts, lens, codes)
+    off = 0
+    for blob, c in zip(blobs, counts):
+        np.testing.assert_array_equal(
+            blob, huffman.encode(data[off : off + c], lens, codes)
+        )
+        off += c
+    decoded = huffman.decode_many(blobs, counts, lens)
+    np.testing.assert_array_equal(np.concatenate(decoded), data)
+
+
+def test_decode_many_ragged_counts():
+    """Chunks of very different lengths exercise the early-finish clamping."""
+    rng = np.random.default_rng(4)
+    data = rng.integers(0, 8, 10_000).astype(np.uint8)
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    codes = huffman.canonical_codes(lens)
+    counts = np.array([1, 9000, 37, 500, 462])
+    assert counts.sum() == data.size
+    blobs = huffman.encode_chunks(data, counts, lens, codes)
+    decoded = huffman.decode_many(blobs, counts, lens)
+    np.testing.assert_array_equal(np.concatenate(decoded), data)
+
+
+@given(st.lists(st.integers(0, 255), min_size=1, max_size=2000))
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_property(xs):
+    data = np.asarray(xs, dtype=np.uint8)
+    _roundtrip(data)
+
+
+@given(
+    st.integers(2, 6).flatmap(
+        lambda k: st.lists(
+            st.lists(st.integers(0, 255), min_size=1, max_size=300),
+            min_size=k,
+            max_size=k,
+        )
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_chunked_roundtrip_property(chunks):
+    data = np.asarray([x for c in chunks for x in c], dtype=np.uint8)
+    counts = np.asarray([len(c) for c in chunks])
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    codes = huffman.canonical_codes(lens)
+    blobs = huffman.encode_chunks(data, counts, lens, codes)
+    decoded = huffman.decode_many(blobs, counts, lens)
+    np.testing.assert_array_equal(np.concatenate(decoded), data)
+
+
+def test_estimate_matches_actual():
+    rng = np.random.default_rng(9)
+    data = rng.integers(0, 30, 65536).astype(np.uint8)
+    hist = np.bincount(data, minlength=256)
+    lens = huffman.code_lengths(hist)
+    codes = huffman.canonical_codes(lens)
+    est_bits = huffman.estimate_encoded_bits(hist, lens)
+    blob = huffman.encode(data, lens, codes)
+    assert len(blob) == -(-est_bits // 8)

@@ -1,0 +1,166 @@
+"""Pallas kernel validation: interpret-mode kernels vs pure-jnp oracles vs
+the host codec.  Shape sweeps per kernel; exact equality everywhere (these
+are bit-manipulation kernels — no tolerance)."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import bitlayout, huffman
+from repro.kernels import ops, ref
+
+SIZES = [1, 100, 128, 4096, 65_536, 200_000]
+
+
+def _rand_u16(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 1 << 16, n).astype(np.uint16)
+
+
+def _rand_u32(n, seed=0):
+    return np.random.default_rng(seed).integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+
+
+def _weights_bf16(n, seed=0):
+    w = (np.random.default_rng(seed).standard_normal(n) * 0.02).astype(np.float32)
+    return np.ascontiguousarray(w.astype(ml_dtypes.bfloat16)).view(np.uint16)
+
+
+class TestBytegroup:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_bf16_kernel_vs_oracle(self, n):
+        x = _rand_u16(n, n)
+        ke, kf = ops.bytegroup_bf16(jnp.asarray(x))
+        oe, of = ref.bytegroup_bf16(jnp.asarray(x))
+        np.testing.assert_array_equal(np.asarray(ke), np.asarray(oe))
+        np.testing.assert_array_equal(np.asarray(kf), np.asarray(of))
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_bf16_kernel_vs_host_codec(self, n):
+        x = _weights_bf16(n, n)
+        ke, kf = ops.bytegroup_bf16(jnp.asarray(x))
+        layout = bitlayout.layout_for("bfloat16")
+        he, hf = bitlayout.to_planes(x.view(np.uint8), layout)
+        np.testing.assert_array_equal(np.asarray(ke), he)
+        np.testing.assert_array_equal(np.asarray(kf), hf)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_bf16_roundtrip(self, n):
+        x = _rand_u16(n, n + 1)
+        e, f = ops.bytegroup_bf16(jnp.asarray(x))
+        back = ops.ungroup_bf16(e, f)
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    @pytest.mark.parametrize("n", SIZES)
+    def test_fp32_kernel_vs_oracle_and_roundtrip(self, n):
+        x = _rand_u32(n, n)
+        kp = ops.bytegroup_fp32(jnp.asarray(x))
+        op = ref.bytegroup_fp32(jnp.asarray(x))
+        for k, o in zip(kp, op):
+            np.testing.assert_array_equal(np.asarray(k), np.asarray(o))
+        back = ops.ungroup_fp32(*kp)
+        np.testing.assert_array_equal(np.asarray(back), x)
+
+    def test_fp32_plane0_is_exponent(self):
+        w = (np.random.default_rng(3).standard_normal(10_000) * 0.05).astype(np.float32)
+        planes = ops.bytegroup_fp32(jnp.asarray(w.view(np.uint32)))
+        np.testing.assert_array_equal(
+            np.asarray(planes[0]).astype(np.int32), bitlayout.exponent_view(w)
+        )
+
+
+class TestHistogram:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_vs_oracle_and_numpy(self, n):
+        x = np.random.default_rng(n).integers(0, 256, n).astype(np.uint8)
+        kh = np.asarray(ops.byte_histogram(jnp.asarray(x)))
+        np.testing.assert_array_equal(kh, np.bincount(x, minlength=256))
+        oh = np.asarray(ref.histogram(jnp.asarray(x)))
+        np.testing.assert_array_equal(oh, np.bincount(x, minlength=256))
+
+    def test_skewed_exponent_plane(self):
+        x = _weights_bf16(50_000, 9)
+        exp_plane, _ = ops.bytegroup_bf16(jnp.asarray(x))
+        kh = np.asarray(ops.byte_histogram(exp_plane))
+        np.testing.assert_array_equal(
+            kh, np.bincount(np.asarray(exp_plane), minlength=256)
+        )
+        # paper Fig. 2: ~top-12 exponents hold ≈ 99.9 % of the mass
+        assert np.sort(kh)[-12:].sum() / kh.sum() > 0.99
+
+
+class TestXorDelta:
+    @pytest.mark.parametrize("n", SIZES)
+    def test_vs_oracle(self, n):
+        a, b = _rand_u32(n, n), _rand_u32(n, n + 7)
+        kd, kc = ops.xor_delta_u32(jnp.asarray(a), jnp.asarray(b))
+        od, oc = ref.xor_delta(jnp.asarray(a), jnp.asarray(b))
+        np.testing.assert_array_equal(np.asarray(kd), np.asarray(od))
+        assert int(kc) == int(oc)
+        np.testing.assert_array_equal(np.asarray(kd), a ^ b)
+
+    def test_changed_byte_count(self):
+        a = np.zeros(1000, dtype=np.uint32)
+        b = a.copy()
+        b[:10] = 0x000000FF          # 10 words, 1 byte each
+        b[10] = 0xFFFFFFFF           # 1 word, 4 bytes
+        _, cnt = ops.xor_delta_u32(jnp.asarray(a), jnp.asarray(b))
+        assert int(cnt) == 14
+
+    def test_self_delta_zero(self):
+        a = _rand_u32(5000, 1)
+        d, cnt = ops.xor_delta_u32(jnp.asarray(a), jnp.asarray(a))
+        assert int(cnt) == 0 and not np.asarray(d).any()
+
+
+class TestBitpack:
+    def _table(self, data):
+        hist = np.bincount(data, minlength=256)
+        lens = huffman.code_lengths(hist)
+        return lens, huffman.canonical_codes(lens)
+
+    @pytest.mark.parametrize("n", [64, 8192, 16384, 20_000])
+    def test_kernel_matches_host_encoder(self, n):
+        rng = np.random.default_rng(n)
+        p = np.r_[np.full(12, 0.08), np.full(244, 0.04 / 244)]
+        data = rng.choice(256, p=p / p.sum(), size=n).astype(np.uint8)
+        lens, codes = self._table(data)
+        blobs = ops.huffman_encode_chunks(data, lens, codes, chunk_syms=8192)
+        host = huffman.encode_chunks(
+            data,
+            np.asarray(
+                [8192] * (n // 8192) + ([n % 8192] if n % 8192 else [])
+            ),
+            lens,
+            codes,
+        )
+        assert len(blobs) == len(host)
+        for kb, hb in zip(blobs, host):
+            assert kb == hb
+
+    def test_kernel_vs_oracle(self):
+        rng = np.random.default_rng(5)
+        data = rng.integers(0, 16, 8192).astype(np.uint8)
+        lens, codes = self._table(data)
+        words, nbits = ref.bitpack_encode(
+            jnp.asarray(data), jnp.asarray(lens, jnp.int32), jnp.asarray(codes, jnp.int32)
+        )
+        payload = np.asarray(words).astype(">u4").tobytes()[: -(-int(nbits) // 8)]
+        assert payload == huffman.encode(data, lens, codes)
+
+    def test_decodable_by_host(self):
+        rng = np.random.default_rng(6)
+        data = rng.integers(0, 8, 16384).astype(np.uint8)
+        lens, codes = self._table(data)
+        blobs = ops.huffman_encode_chunks(data, lens, codes, chunk_syms=8192)
+        decoded = huffman.decode_many(blobs, [8192, 8192], lens)
+        np.testing.assert_array_equal(np.concatenate(decoded), data)
+
+    @pytest.mark.parametrize("nsyms", [2, 5, 256])
+    def test_alphabet_sweep(self, nsyms):
+        rng = np.random.default_rng(nsyms)
+        data = rng.integers(0, nsyms, 8192).astype(np.uint8)
+        lens, codes = self._table(data)
+        blobs = ops.huffman_encode_chunks(data, lens, codes, chunk_syms=8192)
+        decoded = huffman.decode_many(blobs, [8192], lens)
+        np.testing.assert_array_equal(decoded[0], data)

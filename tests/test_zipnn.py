@@ -1,0 +1,175 @@
+"""End-to-end ZipNN API tests: round-trips, paper-ratio validation, deltas."""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codec, zipnn
+
+
+RNG = np.random.default_rng(0)
+
+
+def _gauss(n, dtype, scale=0.02):
+    w = (np.random.default_rng(123).standard_normal(n) * scale).astype(np.float32)
+    return w.astype(dtype)
+
+
+@pytest.mark.parametrize("backend", ["hufflib", "huffman"])
+@pytest.mark.parametrize(
+    "dtype", [np.float32, ml_dtypes.bfloat16, np.float16, np.int32, np.uint8]
+)
+def test_array_roundtrip(backend, dtype):
+    cfg = zipnn.ZipNNConfig(backend=backend)
+    arr = _gauss(100_000, np.float32).view(np.uint8)[: 100_000 * 4].view(np.float32)
+    arr = (
+        _gauss(50_000, dtype)
+        if np.dtype(dtype).kind == "f" or dtype == ml_dtypes.bfloat16
+        else np.random.default_rng(5).integers(0, 100, 50_000).astype(dtype)
+    )
+    ct = zipnn.compress_array(arr, cfg)
+    back = zipnn.decompress_array(ct, cfg)
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    np.testing.assert_array_equal(
+        back.view(np.uint8), np.ascontiguousarray(arr).view(np.uint8)
+    )
+
+
+class TestPaperRatios:
+    """Validate the paper's headline compression numbers (§3.3, Table 2)."""
+
+    def test_bf16_regular_about_66pct(self):
+        arr = _gauss(4_000_000, ml_dtypes.bfloat16)
+        ct = zipnn.compress_array(arr)
+        r = zipnn.ratio(arr.nbytes, ct.nbytes)
+        assert 62.0 <= r <= 70.0, r      # paper: ~66.4 %
+
+    def test_fp32_regular_about_83pct(self):
+        arr = _gauss(2_000_000, np.float32)
+        ct = zipnn.compress_array(arr)
+        r = zipnn.ratio(arr.nbytes, ct.nbytes)
+        assert 79.0 <= r <= 87.0, r      # paper: ~83.3 %
+
+    def test_clean_fp32_below_60pct(self):
+        arr = np.round(_gauss(2_000_000, np.float32), 3).astype(np.float32)
+        ct = zipnn.compress_array(arr)
+        r = zipnn.ratio(arr.nbytes, ct.nbytes)
+        assert r < 60.0, r               # paper clean models: 33–55 %
+
+    def test_exponent_plane_compresses_3x(self):
+        from repro.core import bitlayout, stats
+
+        arr = _gauss(2_000_000, ml_dtypes.bfloat16)
+        rep = stats.plane_report(arr)
+        # exponent plane entropy ⇒ ~3× reduction; fraction ~incompressible
+        assert rep[0]["est_ratio_pct"] < 45.0
+        assert rep[1]["est_ratio_pct"] > 95.0
+
+    def test_zipnn_beats_lz_baseline_on_bf16(self):
+        """Paper: ZipNN ≥ 17 % better than vanilla zstd-class on BF16."""
+        from repro.core import baselines
+
+        arr = _gauss(2_000_000, ml_dtypes.bfloat16)
+        raw = np.ascontiguousarray(arr).view(np.uint8).tobytes()
+        zlib_size, _ = baselines.run_baseline("zlib", raw)
+        ct = zipnn.compress_array(arr)
+        assert ct.nbytes < zlib_size
+
+
+def test_pytree_roundtrip():
+    import jax
+
+    tree = {
+        "wte": _gauss(10_000, ml_dtypes.bfloat16).reshape(100, 100),
+        "blocks": [
+            {"w": _gauss(4_096, np.float32).reshape(64, 64), "b": np.zeros(64, np.float32)}
+        ],
+        "step": np.asarray(7, dtype=np.int32),
+    }
+    manifest = zipnn.compress_pytree(tree)
+    back = zipnn.decompress_pytree(manifest)
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert manifest["comp_bytes"] < manifest["raw_bytes"]
+
+
+class TestDelta:
+    def test_delta_roundtrip_and_ratio(self):
+        base = _gauss(1_000_000, ml_dtypes.bfloat16)
+        new = np.asarray(base).copy()
+        idx = np.random.default_rng(1).integers(0, new.size, new.size // 100)
+        new[idx] = (np.asarray(new[idx], np.float32) * 1.001).astype(ml_dtypes.bfloat16)
+        ct = zipnn.delta_compress(new, base)
+        rec = zipnn.delta_decompress(ct, base)
+        np.testing.assert_array_equal(
+            rec.view(np.uint8), np.ascontiguousarray(new).view(np.uint8)
+        )
+        # a 1 % change must compress far better than a standalone model
+        assert zipnn.ratio(new.nbytes, ct.nbytes) < 20.0
+
+    def test_delta_identical_models_near_zero(self):
+        base = _gauss(500_000, np.float32)
+        ct = zipnn.delta_compress(base, base)
+        assert zipnn.ratio(base.nbytes, ct.nbytes) < 1.0
+
+    def test_delta_mismatched_raises(self):
+        with pytest.raises(ValueError):
+            zipnn.delta_compress(np.zeros(4, np.float32), np.zeros(5, np.float32))
+
+    def test_auto_selection_criteria(self):
+        # >90 % zeros ⇒ ZLIB (LZ) chosen per §4.2
+        params = codec.CodecParams(delta_mode=True, chunk_bytes=4096)
+        pc = codec.PlaneCodec(params)
+        chunk = np.zeros(4096, dtype=np.uint8)
+        chunk[:100] = np.random.default_rng(2).integers(1, 255, 100)
+        rng_chunk = np.random.default_rng(3).integers(0, 255, 4096).astype(np.uint8)
+        pc.build_table(np.concatenate([chunk, rng_chunk]))
+        assert pc._choose_method(chunk, 0) == codec.Method.ZLIB
+        # long zero run (>3 %) ⇒ ZLIB even when zeros < 90 %
+        chunk2 = np.random.default_rng(4).integers(1, 255, 4096).astype(np.uint8)
+        chunk2[1000:1200] = 0
+        assert pc._choose_method(chunk2, 0) == codec.Method.ZLIB
+
+
+class TestAutoDetection:
+    def test_incompressible_plane_stored(self):
+        raw = np.random.default_rng(5).integers(0, 256, 1 << 20).astype(np.uint8)
+        blob = zipnn.compress_bytes(raw.tobytes(), "uint8")
+        # stored with only header/metadata overhead (< 1 %)
+        assert len(blob) < raw.size * 1.01
+        assert zipnn.decompress_bytes(blob) == raw.tobytes()
+
+    def test_zero_plane_truncated(self):
+        z = np.zeros(1 << 20, dtype=np.float32)
+        ct = zipnn.compress_array(z)
+        assert ct.nbytes < 4096   # headers only
+        np.testing.assert_array_equal(zipnn.decompress_array(ct), z)
+
+    def test_longest_zero_run(self):
+        a = np.array([0, 0, 1, 0, 0, 0, 2, 0], dtype=np.uint8)
+        assert codec.longest_zero_run(a) == 3
+        assert codec.longest_zero_run(np.zeros(10, np.uint8)) == 10
+        assert codec.longest_zero_run(np.ones(10, np.uint8)) == 0
+
+
+@given(
+    st.integers(0, 3000),
+    st.sampled_from(["float32", "bfloat16", "float16"]),
+    st.sampled_from(["hufflib", "huffman"]),
+)
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_property(n, dtype_name, backend):
+    import ml_dtypes as md
+
+    dtype = {"float32": np.float32, "bfloat16": md.bfloat16, "float16": np.float16}[
+        dtype_name
+    ]
+    rng = np.random.default_rng(n)
+    arr = (rng.standard_normal(n) * rng.uniform(1e-6, 1e3)).astype(dtype)
+    cfg = zipnn.ZipNNConfig(backend=backend, chunk_param_bytes=1 << 10)
+    ct = zipnn.compress_array(arr, cfg)
+    back = zipnn.decompress_array(ct, cfg)
+    np.testing.assert_array_equal(
+        back.view(np.uint8), np.ascontiguousarray(arr).view(np.uint8)
+    )
