@@ -51,6 +51,27 @@ def main():
     print(f"delta of a 2%-changed tensor: {100*d.nbytes/w.nbytes:.1f}% "
           "(vs ~66% standalone)")
 
+    # 6. The parallel streaming engine (paper §5.2): threads=-1 fans
+    # (plane, chunk) work items across all cores — bytes are identical to
+    # the serial path — and compress_file/decompress_file stream checkpoints
+    # larger than RAM through a bounded window.
+    import tempfile, os, time
+    raw = np.ascontiguousarray(w).view(np.uint8).tobytes()
+    t0 = time.perf_counter()
+    blob = zipnn.compress_bytes(raw, "bfloat16", threads=-1)
+    t_par = time.perf_counter() - t0
+    assert blob == zipnn.compress_bytes(raw, "bfloat16")   # deterministic
+    with tempfile.TemporaryDirectory() as td:
+        src = os.path.join(td, "ckpt.bin")
+        dst = os.path.join(td, "ckpt.znns")
+        with open(src, "wb") as f:
+            f.write(raw)
+        raw_b, comp_b = zipnn.compress_file(
+            src, dst, "bfloat16", window_bytes=1 << 20, threads=-1
+        )
+        print(f"engine: {raw_b/1e6:.1f} MB streamed → {comp_b/1e6:.1f} MB "
+              f"(all-core compress in {t_par*1e3:.0f} ms, O(window) memory)")
+
 
 if __name__ == "__main__":
     main()

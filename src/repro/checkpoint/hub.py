@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict
+from typing import Dict, Optional
 
 import numpy as np
 
@@ -56,13 +56,17 @@ def simulate_transfer(
     *,
     direction: str = "download",
     config: zipnn.ZipNNConfig = zipnn.DEFAULT,
+    threads: Optional[int] = None,
 ) -> TransferReport:
+    """Measure one hub transfer.  ``threads`` fans the codec's (plane,
+    chunk) work items across the engine pool — the hub-scale serving knob
+    (codec time scales down with cores, wire time is fixed)."""
     bw = CHANNELS[channel] * 1e6
     t0 = time.perf_counter()
-    blob = zipnn.compress_bytes(data, dtype_name, config)
+    blob = zipnn.compress_bytes(data, dtype_name, config, threads=threads)
     t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
-    back = zipnn.decompress_bytes(blob, config)
+    back = zipnn.decompress_bytes(blob, config, threads=threads)
     t_dec = time.perf_counter() - t0
     assert back == bytes(data), "hub transfer must be lossless"
     codec = t_comp if direction == "upload" else t_dec
@@ -72,5 +76,51 @@ def simulate_transfer(
         comp_bytes=len(blob),
         wire_raw_s=len(data) / bw,
         wire_comp_s=len(blob) / bw,
+        codec_s=codec,
+    )
+
+
+def simulate_file_transfer(
+    path: str,
+    dtype_name: str,
+    channel: str,
+    *,
+    direction: str = "download",
+    config: zipnn.ZipNNConfig = zipnn.DEFAULT,
+    window_bytes: Optional[int] = None,
+    threads: Optional[int] = None,
+) -> TransferReport:
+    """Bounded-memory variant of :func:`simulate_transfer` for checkpoints
+    larger than RAM: streams the file through the engine's windowed
+    ``ZNS1`` container (O(window) peak memory) instead of materializing the
+    raw + compressed blobs."""
+    import os
+    import tempfile
+
+    from repro.core import engine
+
+    window = engine.DEFAULT_WINDOW if window_bytes is None else window_bytes
+    bw = CHANNELS[channel] * 1e6
+    with tempfile.TemporaryDirectory() as td:
+        comp_path = os.path.join(td, "model.znns")
+        t0 = time.perf_counter()
+        raw_bytes, comp_bytes = engine.compress_file(
+            path, comp_path, dtype_name, config,
+            window_bytes=window, threads=threads,
+        )
+        t_comp = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with open(os.devnull, "wb") as sink:
+            n = engine.decompress_file(comp_path, sink, config, threads=threads)
+        t_dec = time.perf_counter() - t0
+    if n != raw_bytes:
+        raise AssertionError("streamed hub transfer must be lossless")
+    codec = t_comp if direction == "upload" else t_dec
+    return TransferReport(
+        channel=channel,
+        raw_bytes=raw_bytes,
+        comp_bytes=comp_bytes,
+        wire_raw_s=raw_bytes / bw,
+        wire_comp_s=comp_bytes / bw,
         codec_s=codec,
     )

@@ -42,7 +42,15 @@ class CheckpointConfig:
     base_every: int = 5              # every k-th save is a full base (§4.2)
     keep_bases: int = 2              # retention: bases (+ their deltas)
     async_save: bool = True
+    # Engine workers for per-tensor (plane, chunk) compression — stacks with
+    # async_save: the save thread fans chunk work items across the pool.
+    # 0/1 serial, N > 1 pool workers, -1 all cores (see core/engine.py).
+    threads: int = 0
     zipnn: zipnn.ZipNNConfig = dataclasses.field(default_factory=zipnn.ZipNNConfig)
+
+    def __post_init__(self) -> None:
+        if self.threads and not self.zipnn.threads:
+            self.zipnn = dataclasses.replace(self.zipnn, threads=self.threads)
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:

@@ -3,6 +3,14 @@ primary contribution), plus the baselines it is evaluated against."""
 
 from .bitlayout import BitLayout, LAYOUTS, layout_for, to_planes, from_planes, exponent_view
 from .codec import CodecParams, Method, longest_zero_run
+from .engine import (
+    CompressWriter,
+    DecompressReader,
+    compress_file,
+    decompress_file,
+    get_pool,
+    resolve_threads,
+)
 from .zipnn import (
     ZipNNConfig,
     CompressedTensor,
@@ -22,6 +30,8 @@ from . import baselines
 __all__ = [
     "BitLayout", "LAYOUTS", "layout_for", "to_planes", "from_planes",
     "exponent_view", "CodecParams", "Method", "longest_zero_run",
+    "CompressWriter", "DecompressReader", "compress_file", "decompress_file",
+    "get_pool", "resolve_threads",
     "ZipNNConfig", "CompressedTensor", "compress_array", "decompress_array",
     "compress_bytes", "decompress_bytes", "compress_pytree",
     "decompress_pytree", "delta_compress", "delta_decompress", "ratio",

@@ -98,21 +98,52 @@ def layout_for(dtype_name: str) -> BitLayout:
         raise ValueError(f"no ZipNN bit layout for dtype {dtype_name!r}") from None
 
 
-def _rotl1(u: np.ndarray, bits: int) -> np.ndarray:
-    return ((u << 1) | (u >> (bits - 1))).astype(u.dtype)
+# Rotations run segment-at-a-time into a preallocated output: whole-array
+# expressions allocate multi-16MB temps (page-fault churn past the allocator
+# cache), and per-segment ufuncs release the GIL so segments fan across the
+# engine pool.
+_ROT_SEG = 1 << 20      # elements per rotate work item
 
 
-def _rotr1(u: np.ndarray, bits: int) -> np.ndarray:
-    return ((u >> 1) | (u << (bits - 1))).astype(u.dtype)
+def _rot1_segmented(u: np.ndarray, bits: int, left: bool, pool) -> np.ndarray:
+    out = np.empty_like(u)
+    a, b = (1, bits - 1) if left else (bits - 1, 1)
+
+    def seg(i0):
+        s = u[i0 : i0 + _ROT_SEG]
+        d = out[i0 : i0 + _ROT_SEG]
+        np.left_shift(s, a, out=d)
+        d |= s >> b
+
+    starts = range(0, u.size, _ROT_SEG)
+    if pool is not None and len(starts) > 1:
+        list(pool.map(seg, starts))
+    else:
+        for i0 in starts:
+            seg(i0)
+    return out
 
 
-def to_planes(raw: np.ndarray, layout: BitLayout) -> Tuple[np.ndarray, ...]:
+def _rotl1(u: np.ndarray, bits: int, pool=None) -> np.ndarray:
+    return _rot1_segmented(u, bits, True, pool)
+
+
+def _rotr1(u: np.ndarray, bits: int, pool=None) -> np.ndarray:
+    return _rot1_segmented(u, bits, False, pool)
+
+
+def to_planes(
+    raw: np.ndarray, layout: BitLayout, pool=None
+) -> Tuple[np.ndarray, ...]:
     """Split a flat uint8 buffer of parameters into byte-group planes.
 
     ``raw`` is the little-endian byte view of the tensor, length divisible by
     ``layout.itemsize``.  Returns ``layout.n_planes`` uint8 arrays, plane 0
     being the (pure, if ``layout.rotate``) exponent byte — most significant
     byte after rotation — matching paper Fig. 3/Fig. 5.
+
+    The per-plane strided gathers are independent memcpy loops (which
+    release the GIL), so ``pool`` fans them across threads.
     """
     if raw.dtype != np.uint8:
         raise TypeError("to_planes expects a uint8 byte view")
@@ -124,30 +155,46 @@ def to_planes(raw: np.ndarray, layout: BitLayout) -> Tuple[np.ndarray, ...]:
         return (np.ascontiguousarray(raw),)
     u = raw.view(layout.uint_dtype)
     if layout.rotate:
-        u = _rotl1(u, layout.total_bits)
+        u = _rotl1(u, layout.total_bits, pool)
     # Big-endian byte split: plane 0 = MSB (exponent after rotation).
     # Strided views over the little-endian byte image — one memcpy per plane
     # instead of shift+mask+downcast per plane.
     bytes_le = u.view(np.uint8).reshape(-1, layout.itemsize)
-    return tuple(
-        np.ascontiguousarray(bytes_le[:, layout.itemsize - 1 - i])
-        for i in range(layout.itemsize)
-    )
+    cols = [layout.itemsize - 1 - i for i in range(layout.itemsize)]
+    if pool is not None:
+        return tuple(
+            pool.map(lambda c: np.ascontiguousarray(bytes_le[:, c]), cols)
+        )
+    return tuple(np.ascontiguousarray(bytes_le[:, c]) for c in cols)
 
 
-def from_planes(planes: Tuple[np.ndarray, ...], layout: BitLayout) -> np.ndarray:
-    """Inverse of :func:`to_planes` — returns the flat uint8 byte view."""
+def from_planes(
+    planes: Tuple[np.ndarray, ...], layout: BitLayout, pool=None
+) -> np.ndarray:
+    """Inverse of :func:`to_planes` — returns the flat uint8 byte view.
+
+    Each plane scatters into its own byte column of the output, so the
+    per-plane writes are disjoint and safe to fan across ``pool``.
+    """
     if len(planes) != layout.n_planes:
         raise ValueError(f"expected {layout.n_planes} planes, got {len(planes)}")
     if layout.itemsize == 1:
         return np.ascontiguousarray(planes[0])
     n = planes[0].size
     bytes_le = np.empty((n, layout.itemsize), dtype=np.uint8)
-    for i, p in enumerate(planes):
+
+    def scatter(i_p):
+        i, p = i_p
         bytes_le[:, layout.itemsize - 1 - i] = p
+
+    if pool is not None:
+        list(pool.map(scatter, enumerate(planes)))
+    else:
+        for ip in enumerate(planes):
+            scatter(ip)
     u = bytes_le.reshape(-1).view(layout.uint_dtype)
     if layout.rotate:
-        u = _rotr1(u, layout.total_bits)
+        u = _rotr1(u, layout.total_bits, pool)
     return u.view(np.uint8)
 
 

@@ -34,7 +34,46 @@ __all__ = [
     "compress_plane",
     "decompress_plane",
     "longest_zero_run",
+    "split_ids",
 ]
+
+# Work-item granularity for the thread-pool paths: several batches per
+# worker so a slow batch (e.g. one with every HUFF chunk) cannot serialize
+# the tail of the schedule.
+_BATCHES_PER_WORKER = 4
+
+
+def split_ids(n_items: int, n_parts: int) -> List[range]:
+    """Partition ``range(n_items)`` into ≤ ``n_parts`` contiguous ranges.
+
+    Contiguity keeps each work item operating on one dense slice of the
+    plane (cache-friendly) and makes result concatenation order-preserving —
+    the pool path's output is byte-identical to the serial path's.
+    """
+    if n_items <= 0:
+        return []
+    n_parts = max(1, min(n_parts, n_items))
+    step = -(-n_items // n_parts)
+    return [range(i, min(i + step, n_items)) for i in range(0, n_items, step)]
+
+
+def _fan_out(pool, n_items: int, work) -> List:
+    """Run ``work(ids)`` over all of ``range(n_items)``, fanning contiguous
+    id batches across ``pool`` (serial when ``pool`` is None or trivial).
+
+    Batch results are concatenated in id order — the determinism contract.
+    ``work`` may return None for pure side-effect items (disjoint writes);
+    the empty list is returned in that case.
+    """
+    if pool is None or n_items < 2:
+        out = work(range(n_items))
+        return [] if out is None else list(out)
+    workers = getattr(pool, "_max_workers", None) or 1
+    batches = split_ids(n_items, workers * _BATCHES_PER_WORKER)
+    results = list(pool.map(work, batches))
+    if results and results[0] is None:
+        return []
+    return [x for r in results for x in r]
 
 
 class Method:
@@ -69,6 +108,32 @@ class CodecParams:
     zero_run_frac_zlib: float = 0.03    # longest zero-run fraction ⇒ prefer LZ
     backend: str = "huffman"            # 'huffman' (ours) | 'hufflib' (zlib -2)
     zlib_level: int = 6
+
+
+def hist256(a: np.ndarray) -> np.ndarray:
+    """Byte histogram, chunked.
+
+    ``np.bincount`` casts its input to intp; above ~2^22 elements the temp
+    buffer exceeds the allocator cache and per-call page faults make it ~5×
+    slower per byte.  Summing sub-2^21 pieces keeps every temp cached.
+    """
+    if a.size <= (1 << 21):
+        return np.bincount(a, minlength=256)
+    if not a.flags.c_contiguous or a.size % 2:
+        h = np.zeros(256, dtype=np.int64)
+        for i in range(0, a.size, 1 << 21):
+            h += np.bincount(a[i : i + (1 << 21)], minlength=256)
+        return h
+    # Count byte *pairs* as uint16 and fold the 256×256 table: skewed model
+    # bytes hammer a handful of counters, and pairing halves the
+    # store-to-load dependency chains on those hot counters (~2×).
+    h = np.zeros(256, dtype=np.int64)
+    u16 = a.view(np.uint16)
+    for i in range(0, u16.size, 1 << 20):
+        c16 = np.bincount(u16[i : i + (1 << 20)], minlength=65536).reshape(256, 256)
+        h += c16.sum(axis=0, dtype=np.int64)
+        h += c16.sum(axis=1, dtype=np.int64)
+    return h
 
 
 def longest_zero_run(chunk: np.ndarray) -> int:
@@ -108,7 +173,7 @@ class PlaneCodec:
     codes: Optional[np.ndarray] = None
 
     def build_table(self, plane: np.ndarray) -> None:
-        hist = np.bincount(plane, minlength=256)
+        hist = hist256(plane)
         self.table = huffman.code_lengths(hist)
         self.codes = huffman.canonical_codes(self.table)
 
@@ -117,8 +182,28 @@ class PlaneCodec:
         return huffman.pack_table(self.table)
 
     # -- compression ------------------------------------------------------
+    #
+    # compress() is split into three per-chunk work-item stages so the
+    # serial path, the thread-pool path (engine.py), and the streaming file
+    # path share ONE implementation:
+    #
+    #   plan()        pass 1 — per-chunk method selection (sequential: the
+    #                 probe-skip state machine carries state across chunks);
+    #   encode_ids()  pass 2 — pure batch encoder over an arbitrary subset
+    #                 of chunk ids.  Chunk payloads are byte-aligned and
+    #                 independent, so any partition of the id space produces
+    #                 byte-identical blobs — the invariant that makes the
+    #                 pool path deterministic;
+    #   finalize()    pass 3 — expansion fallback + metadata map.
 
-    def compress(self, plane: np.ndarray) -> Tuple[List[ChunkEntry], List[bytes]]:
+    def plan(self, plane: np.ndarray, pool=None) -> List[int]:
+        """Pass 1: choose a method per chunk (probe + probe-skip logic).
+
+        The per-chunk probe *statistics* (histogram → estimated size, zero
+        run) are pure per-chunk work items and fan out across ``pool``; the
+        probe-skip state machine that consumes them stays sequential, so the
+        chosen methods are identical for any thread count.
+        """
         p = self.params
         n = plane.size
         n_chunks = -(-n // p.chunk_bytes) if n else 0
@@ -130,9 +215,9 @@ class PlaneCodec:
         # < 0.1 % and the probe cost drops ~10× on large planes.
         if n > (1 << 22):
             stride = n // (1 << 22)
-            hist = np.bincount(plane[::stride], minlength=256) * stride + 1
+            hist = hist256(plane[::stride]) * stride + 1
         else:
-            hist = np.bincount(plane, minlength=256) + (1 if n else 0)
+            hist = hist256(plane) + (1 if n else 0)
         if self.table is None:
             self.table = huffman.code_lengths(hist)
             self.codes = huffman.canonical_codes(self.table)
@@ -142,78 +227,141 @@ class PlaneCodec:
         plane_incompressible = (
             not p.delta_mode and n > 0 and est_plane / hist_mass >= p.incompressible
         )
+        if plane_zero:
+            return [Method.ZERO] * n_chunks
+        if plane_incompressible:
+            return [Method.STORE] * n_chunks
 
-        # Pass 1: choose a method per chunk (probe + skip logic).
+        stats = _fan_out(
+            pool, n_chunks, lambda ids: self._chunk_stats(plane, ids)
+        )
+
         methods: List[int] = []
         skip = 0
         for c in range(n_chunks):
-            chunk = plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes]
-            if plane_zero:
-                methods.append(Method.ZERO)
-                continue
-            if plane_incompressible:
-                methods.append(Method.STORE)
-                continue
-            m = self._choose_method(chunk, skip)
+            m = self._method_from_stats(*stats[c], skip)
             if m == Method.STORE and skip == 0:
                 skip = p.skip_chunks          # probe fired: skip next chunks
             elif skip > 0:
                 skip -= 1
             methods.append(m)
+        return methods
 
-        # Pass 2: encode. All HUFF chunks go through one vectorized call.
-        payloads: List[bytes] = [b""] * n_chunks
-        huff_ids = [c for c in range(n_chunks) if methods[c] == Method.HUFF]
+    def _chunk_stats(
+        self, plane: np.ndarray, ids: Sequence[int]
+    ) -> List[Tuple[int, int, int, int]]:
+        """Probe work item: (n, zeros, est_bytes, zero_run) per chunk id."""
+        p = self.params
+        out = []
+        for c in ids:
+            chunk = plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes]
+            hist = np.bincount(chunk, minlength=256)
+            zeros = int(hist[0])
+            est = huffman.estimate_encoded_bits(hist, self.table) / 8.0
+            zrun = (
+                longest_zero_run(chunk)
+                if p.delta_mode and 0 < zeros < chunk.size
+                else zeros
+            )
+            out.append((chunk.size, zeros, est, zrun))
+        return out
+
+    def _method_from_stats(
+        self, n: int, zeros: int, est: float, zrun: int, skip: int
+    ) -> int:
+        """§3.2/§4.2 method selection from precomputed probe statistics."""
+        p = self.params
+        if zeros == n:
+            return Method.ZERO
+        if p.delta_mode:
+            # §4.2 auto-detection: zeros fraction / longest zero run ⇒ LZ.
+            if zeros >= p.zeros_frac_zlib * n:
+                return Method.ZLIB
+            if zrun >= p.zero_run_frac_zlib * n:
+                return Method.ZLIB
+        if skip > 0:
+            return Method.STORE               # inside a probe-skip run
+        if est / n >= p.incompressible:
+            return Method.STORE
+        return Method.HUFF if p.backend == "huffman" else Method.HUFFLIB
+
+    def encode_ids(
+        self, plane: np.ndarray, methods: Sequence[int], ids: Sequence[int]
+    ) -> List[bytes]:
+        """Pass 2 work item: encode the given chunk ids, in ``ids`` order.
+
+        Pure w.r.t. shared state (the table is read-only), so any number of
+        these can run concurrently.  All HUFF chunks of the batch go through
+        one vectorized :func:`huffman.encode_chunks` call.
+        """
+        cb = self.params.chunk_bytes
+        huff_blobs = {}
+        huff_ids = [c for c in ids if methods[c] == Method.HUFF]
         if huff_ids:
-            segs = [
-                plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes] for c in huff_ids
-            ]
+            segs = [plane[c * cb : (c + 1) * cb] for c in huff_ids]
             blobs = huffman.encode_chunks(
                 np.concatenate(segs),
                 np.asarray([s.size for s in segs]),
                 self.table,
                 self.codes,
             )
-            for c, b in zip(huff_ids, blobs):
-                payloads[c] = b
-        for c in range(n_chunks):
-            if methods[c] in (Method.HUFF, Method.ZERO):
-                continue
-            chunk = plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes]
-            payloads[c] = self._encode(chunk, methods[c])
+            huff_blobs = dict(zip(huff_ids, blobs))
+        out: List[bytes] = []
+        for c in ids:
+            m = methods[c]
+            if m == Method.HUFF:
+                out.append(huff_blobs[c])
+            elif m == Method.ZERO:
+                out.append(b"")
+            else:
+                out.append(self._encode(plane[c * cb : (c + 1) * cb], m))
+        return out
 
-        # Pass 3: metadata map (+ raw fallback for expansion).
+    def finalize(
+        self, plane: np.ndarray, methods: List[int], payloads: List[bytes]
+    ) -> List[ChunkEntry]:
+        """Pass 3: metadata map (+ raw fallback for expansion).
+
+        Mutates ``payloads`` in place where a chunk expanded.
+        """
+        p = self.params
+        n = plane.size
         entries: List[ChunkEntry] = []
-        for c in range(n_chunks):
+        for c in range(len(methods)):
             raw_len = min(p.chunk_bytes, n - c * p.chunk_bytes)
             m, blob = methods[c], payloads[c]
-            if m != Method.ZERO and len(blob) >= raw_len:
+            if m not in (Method.ZERO, Method.STORE) and len(blob) >= raw_len:
                 chunk = plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes]
                 m, blob = Method.STORE, chunk.tobytes()
                 payloads[c] = blob
             entries.append(
                 ChunkEntry(m, len(blob), raw_len, 0 if m == Method.ZERO else zlib.crc32(blob))
             )
+        return entries
+
+    def compress(
+        self, plane: np.ndarray, pool=None
+    ) -> Tuple[List[ChunkEntry], List[bytes]]:
+        """Compress one plane; ``pool`` (a ThreadPoolExecutor) fans the
+        encode work items across threads with deterministic ordering."""
+        methods = self.plan(plane, pool=pool)
+        payloads = _fan_out(
+            pool, len(methods), lambda ids: self.encode_ids(plane, methods, ids)
+        )
+        entries = self.finalize(plane, methods, payloads)
         return entries, payloads
 
     def _choose_method(self, chunk: np.ndarray, skip: int) -> int:
-        p = self.params
-        n = chunk.size
+        """Single-chunk probe (stats + selection in one call)."""
         hist = np.bincount(chunk, minlength=256)
-        if hist[0] == n:
-            return Method.ZERO
-        if p.delta_mode:
-            # §4.2 auto-detection: zeros fraction / longest zero run ⇒ LZ.
-            if hist[0] >= p.zeros_frac_zlib * n:
-                return Method.ZLIB
-            if longest_zero_run(chunk) >= p.zero_run_frac_zlib * n:
-                return Method.ZLIB
-        if skip > 0:
-            return Method.STORE               # inside a probe-skip run
+        zeros = int(hist[0])
         est = huffman.estimate_encoded_bits(hist, self.table) / 8.0
-        if est / n >= p.incompressible:
-            return Method.STORE
-        return Method.HUFF if p.backend == "huffman" else Method.HUFFLIB
+        zrun = (
+            longest_zero_run(chunk)
+            if self.params.delta_mode and 0 < zeros < chunk.size
+            else zeros
+        )
+        return self._method_from_stats(chunk.size, zeros, est, zrun, skip)
 
     def _encode(self, chunk: np.ndarray, method: int) -> bytes:
         if method == Method.ZERO:
@@ -230,17 +378,21 @@ class PlaneCodec:
 
     # -- decompression ----------------------------------------------------
 
-    def decompress(
-        self, entries: Sequence[ChunkEntry], payloads: Sequence[bytes]
-    ) -> np.ndarray:
-        """Rebuild a plane. HUFF chunks decode in lockstep (chunk-parallel)."""
-        total = sum(e.raw_len for e in entries)
-        out = np.empty(total, dtype=np.uint8)
-        offs = np.concatenate(
-            [[0], np.cumsum([e.raw_len for e in entries])]
-        ).astype(np.int64)
+    def decode_into(
+        self,
+        out: np.ndarray,
+        offs: np.ndarray,
+        entries: Sequence[ChunkEntry],
+        payloads: Sequence[bytes],
+        ids: Sequence[int],
+    ) -> None:
+        """Decode work item: rebuild the given chunk ids into ``out``.
 
-        huff_idx = [i for i, e in enumerate(entries) if e.method == Method.HUFF]
+        Each id writes a disjoint slice of ``out`` so work items are safe to
+        run concurrently.  HUFF chunks of a batch decode in lockstep
+        (chunk-parallel) through one :func:`huffman.decode_many` call.
+        """
+        huff_idx = [i for i in ids if entries[i].method == Method.HUFF]
         if huff_idx:
             assert self.table is not None, "HUFF chunks require a table"
             decoded = huffman.decode_many(
@@ -251,7 +403,8 @@ class PlaneCodec:
             for i, d in zip(huff_idx, decoded):
                 out[offs[i] : offs[i + 1]] = d
 
-        for i, e in enumerate(entries):
+        for i in ids:
+            e = entries[i]
             if e.method == Method.HUFF:
                 continue
             dst = out[offs[i] : offs[i + 1]]
@@ -265,15 +418,31 @@ class PlaneCodec:
                 )
             else:
                 raise ValueError(f"unknown method {e.method}")
+
+    def decompress(
+        self, entries: Sequence[ChunkEntry], payloads: Sequence[bytes], pool=None
+    ) -> np.ndarray:
+        """Rebuild a plane, optionally fanning chunk decodes across a pool."""
+        total = sum(e.raw_len for e in entries)
+        out = np.empty(total, dtype=np.uint8)
+        offs = np.concatenate(
+            [[0], np.cumsum([e.raw_len for e in entries])]
+        ).astype(np.int64)
+
+        _fan_out(
+            pool,
+            len(entries),
+            lambda ids: self.decode_into(out, offs, entries, payloads, ids),
+        )
         return out
 
 
 def compress_plane(
-    plane: np.ndarray, params: CodecParams
+    plane: np.ndarray, params: CodecParams, pool=None
 ) -> Tuple[List[ChunkEntry], List[bytes], Optional[bytes]]:
     """One-shot plane compression. Returns (entries, payloads, table_blob)."""
     codec = PlaneCodec(params)
-    entries, payloads = codec.compress(plane)
+    entries, payloads = codec.compress(plane, pool=pool)
     needs_table = any(e.method == Method.HUFF for e in entries)
     return entries, payloads, (codec.table_blob() if needs_table else None)
 
@@ -283,8 +452,9 @@ def decompress_plane(
     payloads: Sequence[bytes],
     table_blob: Optional[bytes],
     params: CodecParams,
+    pool=None,
 ) -> np.ndarray:
     codec = PlaneCodec(params)
     if table_blob is not None:
         codec.table = huffman.unpack_table(table_blob)
-    return codec.decompress(entries, payloads)
+    return codec.decompress(entries, payloads, pool=pool)

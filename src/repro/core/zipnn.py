@@ -13,6 +13,13 @@ Entry points:
   * :func:`compress_pytree` / :func:`decompress_pytree` — whole model /
     optimizer states; returns a manifest + per-leaf blobs.
   * :func:`delta_compress` / :func:`delta_decompress` — §4.2 XOR deltas.
+  * :func:`compress_file` / :func:`decompress_file` (re-exported from
+    :mod:`.engine`) — bounded-memory streaming over files.
+
+Every entry point takes a ``threads=`` override (default: the config's
+``threads`` field).  With N > 1, (plane, chunk) work items fan out across a
+shared thread pool (see :mod:`.engine`); output bytes are identical to the
+serial path for any thread count.
 """
 
 from __future__ import annotations
@@ -22,7 +29,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from . import bitlayout, codec, container
+from . import bitlayout, codec, container, engine
+from .engine import (             # noqa: F401  (re-exported streaming API)
+    CompressWriter,
+    DecompressReader,
+    compress_file,
+    decompress_file,
+)
 
 __all__ = [
     "ZipNNConfig",
@@ -35,6 +48,10 @@ __all__ = [
     "decompress_pytree",
     "delta_compress",
     "delta_decompress",
+    "compress_file",
+    "decompress_file",
+    "CompressWriter",
+    "DecompressReader",
     "compressed_size",
     "ratio",
 ]
@@ -53,6 +70,10 @@ class ZipNNConfig:
     incompressible: float = 0.98
     skip_chunks: int = 8
     zlib_level: int = 6
+    # Parallelism: 0/1 = serial, N > 1 = N pool workers, -1 = all cores
+    # (the reference implementation's ``max_threads``).  Blob bytes are
+    # identical for every setting.
+    threads: int = 0
 
     def plane_params(self, itemsize: int, delta: bool = False) -> codec.CodecParams:
         return codec.CodecParams(
@@ -91,20 +112,22 @@ def compress_bytes(
     config: ZipNNConfig = DEFAULT,
     *,
     delta: bool = False,
+    threads: Optional[int] = None,
 ) -> bytes:
     """Compress a raw little-endian byte stream interpreted as ``dtype_name``."""
     buf = np.frombuffer(raw, dtype=np.uint8) if isinstance(raw, (bytes, memoryview, bytearray)) else np.ascontiguousarray(raw, dtype=np.uint8)
     layout = bitlayout.layout_for(dtype_name)
     tail = buf.size % layout.itemsize
     body, rem = (buf[: buf.size - tail], buf[buf.size - tail :]) if tail else (buf, None)
-    planes = bitlayout.to_planes(body, layout)
+    pool = engine.get_pool(config.threads if threads is None else threads)
+    planes = bitlayout.to_planes(body, layout, pool=pool)
     params = config.plane_params(layout.itemsize, delta)
 
     tables: List[Optional[bytes]] = []
     entries: List[List[codec.ChunkEntry]] = []
     payloads: List[List[bytes]] = []
     for plane in planes:
-        e, p, t = codec.compress_plane(plane, params)
+        e, p, t = codec.compress_plane(plane, params, pool=pool)
         entries.append(e)
         payloads.append(p)
         tables.append(t)
@@ -117,10 +140,13 @@ def compress_bytes(
     return blob
 
 
-def decompress_bytes(blob: bytes, config: ZipNNConfig = DEFAULT) -> bytes:
+def decompress_bytes(
+    blob: bytes, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+) -> bytes:
     meta, mv = container.unpack_stream(blob)
     layout = next(l for l in bitlayout.LAYOUTS.values() if l.name == meta.layout_name)
     params = codec.CodecParams(chunk_bytes=meta.chunk_bytes, backend=config.backend)
+    pool = engine.get_pool(config.threads if threads is None else threads)
     planes = []
     for p in range(meta.n_planes):
         payload_list = [
@@ -128,9 +154,11 @@ def decompress_bytes(blob: bytes, config: ZipNNConfig = DEFAULT) -> bytes:
             for c in range(len(meta.entries[p]))
         ]
         planes.append(
-            codec.decompress_plane(meta.entries[p], payload_list, meta.tables[p], params)
+            codec.decompress_plane(
+                meta.entries[p], payload_list, meta.tables[p], params, pool=pool
+            )
         )
-    body = bitlayout.from_planes(tuple(planes), layout)
+    body = bitlayout.from_planes(tuple(planes), layout, pool=pool)
     # trailing unaligned bytes
     end = meta.payload_base + sum(
         e.comp_len for pe in meta.entries for e in pe
@@ -153,26 +181,41 @@ def _to_numpy(arr: Any) -> np.ndarray:
     return np.ascontiguousarray(arr).reshape(shape)
 
 
-def compress_array(arr: Any, config: ZipNNConfig = DEFAULT) -> CompressedTensor:
+def compress_array(
+    arr: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+) -> CompressedTensor:
     a = _to_numpy(arr)
-    blob = compress_bytes(a.reshape(-1).view(np.uint8), a.dtype.name, config)
+    blob = compress_bytes(
+        a.reshape(-1).view(np.uint8), a.dtype.name, config, threads=threads
+    )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
 
-def decompress_array(ct: CompressedTensor, config: ZipNNConfig = DEFAULT) -> np.ndarray:
-    raw = decompress_bytes(ct.blob, config)
+def decompress_array(
+    ct: CompressedTensor,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+) -> np.ndarray:
+    raw = decompress_bytes(ct.blob, config, threads=threads)
     import ml_dtypes  # registered with numpy by jax
 
     dtype = np.dtype(getattr(ml_dtypes, ct.dtype, ct.dtype))
     return np.frombuffer(raw, dtype=dtype).reshape(ct.shape).copy()
 
 
-def compress_pytree(tree: Any, config: ZipNNConfig = DEFAULT) -> Dict[str, Any]:
-    """Compress every leaf of a pytree. Returns a manifest dict."""
+def compress_pytree(
+    tree: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+) -> Dict[str, Any]:
+    """Compress every leaf of a pytree. Returns a manifest dict.
+
+    Chunk-level parallelism applies within each leaf; leaves are walked in
+    order so the manifest layout is deterministic.
+    """
     import jax
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    comp = [compress_array(l, config) for l in leaves]
+    comp = [compress_array(l, config, threads=threads) for l in leaves]
     return {
         "treedef": treedef,
         "leaves": comp,
@@ -181,10 +224,15 @@ def compress_pytree(tree: Any, config: ZipNNConfig = DEFAULT) -> Dict[str, Any]:
     }
 
 
-def decompress_pytree(manifest: Dict[str, Any], config: ZipNNConfig = DEFAULT) -> Any:
+def decompress_pytree(
+    manifest: Dict[str, Any],
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+) -> Any:
     import jax
 
-    leaves = [decompress_array(c, config) for c in manifest["leaves"]]
+    leaves = [decompress_array(c, config, threads=threads) for c in manifest["leaves"]]
     return jax.tree_util.tree_unflatten(manifest["treedef"], leaves)
 
 
@@ -193,7 +241,7 @@ def decompress_pytree(manifest: Dict[str, Any], config: ZipNNConfig = DEFAULT) -
 # ---------------------------------------------------------------------------
 
 def delta_compress(
-    new: Any, base: Any, config: ZipNNConfig = DEFAULT
+    new: Any, base: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
 ) -> CompressedTensor:
     """XOR-delta two same-shape tensors and compress the delta stream.
 
@@ -207,15 +255,19 @@ def delta_compress(
     if a.shape != b.shape or a.dtype != b.dtype:
         raise ValueError("delta requires matching shape/dtype")
     x = np.bitwise_xor(a.reshape(-1).view(np.uint8), b.reshape(-1).view(np.uint8))
-    blob = compress_bytes(x, a.dtype.name, config, delta=True)
+    blob = compress_bytes(x, a.dtype.name, config, delta=True, threads=threads)
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
 
 def delta_decompress(
-    ct: CompressedTensor, base: Any, config: ZipNNConfig = DEFAULT
+    ct: CompressedTensor,
+    base: Any,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
 ) -> np.ndarray:
     b = _to_numpy(base)
-    x = np.frombuffer(decompress_bytes(ct.blob, config), dtype=np.uint8)
+    x = np.frombuffer(decompress_bytes(ct.blob, config, threads=threads), dtype=np.uint8)
     raw = np.bitwise_xor(x, b.reshape(-1).view(np.uint8))
     import ml_dtypes
 

@@ -36,8 +36,14 @@ DEFAULT_RULES: Dict[str, Any] = {
 }
 
 
+def _abstract_mesh():
+    """Current abstract mesh, or None on jax versions without the API."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def _current_mesh_axes() -> Optional[Tuple[str, ...]]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = _abstract_mesh()
     if mesh is not None and mesh.axis_names:
         return tuple(mesh.axis_names)
     try:  # legacy `with mesh:` context (what launch/dryrun.py uses)
@@ -87,7 +93,7 @@ def axis_size(name: str) -> int:
             return dict(pm.shape).get(name, 1)
     except Exception:
         pass
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is not None and am.axis_names:
         return dict(am.shape).get(name, 1)
     return 1

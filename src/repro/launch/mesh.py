@@ -15,10 +15,19 @@ MULTI_POD = (2, 16, 16)               # 2 pods × 256 = 512 chips
 
 
 def _mk(shape, axes):
-    # pin Auto axis types: the jax 0.9 default flips to Explicit
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    # Pin Auto axis types where the API exists: the jax 0.9 default flips to
+    # Explicit.  Older jax (< 0.4.38) has neither jax.sharding.AxisType nor
+    # the axis_types= kwarg — there Auto is the only behavior, so plain
+    # make_mesh is equivalent.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+            )
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

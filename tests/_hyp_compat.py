@@ -1,0 +1,128 @@
+"""Shared hypothesis fallback shim for the property tests.
+
+``from _hyp_compat import given, settings, strategies`` behaves exactly like
+the real hypothesis when it is installed.  When it is not, ``@given``
+degrades to running the test body over a fixed number of seeded-random
+examples (example 0 is always the minimal draw — empty binary/list, lower
+integer bound — so edge cases stay covered).  This keeps the property tests
+collectable and meaningful in minimal environments; install ``hypothesis``
+(see requirements.txt) to get real shrinking and coverage.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+
+    _DEFAULT_EXAMPLES = 20
+
+    class _MinRandom(random.Random):
+        """Draw source that always returns the minimal value (edge cases)."""
+
+        def randint(self, a, b):  # noqa: D102 - random.Random signature
+            return a
+
+        def randrange(self, start, stop=None, step=1):
+            return 0 if stop is None else start
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+        def map(self, fn):
+            return _Strategy(lambda rng: fn(self._draw_fn(rng)))
+
+        def flatmap(self, fn):
+            return _Strategy(lambda rng: fn(self._draw_fn(rng)).draw(rng))
+
+        def filter(self, pred, _tries=100):
+            def draw(rng):
+                for _ in range(_tries):
+                    v = self._draw_fn(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+
+            return _Strategy(draw)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(0, 1)))
+
+        @staticmethod
+        def binary(min_size=0, max_size=64):
+            return _Strategy(
+                lambda rng: bytes(
+                    rng.randrange(256)
+                    for _ in range(rng.randint(min_size, max_size))
+                )
+            )
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=32):
+            return _Strategy(
+                lambda rng: [
+                    elements.draw(rng)
+                    for _ in range(rng.randint(min_size, max_size))
+                ]
+            )
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        """Accepts (and ignores) hypothesis-only knobs like deadline."""
+
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # No functools.wraps: pytest must see a zero-arg signature, or
+            # it would try to inject the strategy parameters as fixtures.
+            def wrapper():
+                n = getattr(
+                    wrapper,
+                    "_max_examples",
+                    getattr(fn, "_max_examples", _DEFAULT_EXAMPLES),
+                )
+                for i in range(n):
+                    rng = (
+                        _MinRandom()
+                        if i == 0
+                        else random.Random(0xC0FFEE + 7919 * i)
+                    )
+                    vals = [s.draw(rng) for s in strats]
+                    fn(*vals)
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._hypothesis_fallback = True
+            return wrapper
+
+        return deco

@@ -1,0 +1,242 @@
+"""Parallel + streaming engine tests: determinism across thread counts,
+bounded-memory file round-trips, framed-container edge cases."""
+
+import io
+import os
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import codec, engine, zipnn
+
+
+def _bf16_bytes(n, seed=0, scale=0.02):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal(n) * scale).astype(ml_dtypes.bfloat16)
+    return np.ascontiguousarray(w).view(np.uint8).tobytes()
+
+
+class TestParallelDeterminism:
+    @pytest.mark.parametrize("backend", ["hufflib", "huffman"])
+    def test_threads_1_vs_8_byte_identical(self, backend):
+        cfg = zipnn.ZipNNConfig(backend=backend)
+        raw = _bf16_bytes(1_000_000)
+        blob1 = zipnn.compress_bytes(raw, "bfloat16", cfg, threads=1)
+        blob8 = zipnn.compress_bytes(raw, "bfloat16", cfg, threads=8)
+        assert blob1 == blob8
+        assert zipnn.decompress_bytes(blob8, cfg, threads=8) == raw
+        assert zipnn.decompress_bytes(blob8, cfg, threads=1) == raw
+
+    def test_threads_identical_on_delta_stream(self):
+        raw = bytearray(_bf16_bytes(500_000))
+        raw[::997] = bytes(len(raw[::997]))          # zero runs → ZLIB chunks
+        blob1 = zipnn.compress_bytes(bytes(raw), "bfloat16", delta=True, threads=1)
+        blob4 = zipnn.compress_bytes(bytes(raw), "bfloat16", delta=True, threads=4)
+        assert blob1 == blob4
+        assert zipnn.decompress_bytes(blob4, threads=4) == bytes(raw)
+
+    def test_config_threads_knob(self):
+        cfg = zipnn.ZipNNConfig(threads=8)
+        raw = _bf16_bytes(200_000, seed=3)
+        blob = zipnn.compress_bytes(raw, "bfloat16", cfg)   # pool via config
+        assert blob == zipnn.compress_bytes(raw, "bfloat16")
+        assert zipnn.decompress_bytes(blob, cfg) == raw
+
+    def test_pytree_threads_identical(self):
+        tree = {
+            "w": np.frombuffer(_bf16_bytes(80_000), dtype=ml_dtypes.bfloat16),
+            "b": np.zeros(1000, np.float32),
+        }
+        m0 = zipnn.compress_pytree(tree)
+        m8 = zipnn.compress_pytree(tree, threads=8)
+        assert [c.blob for c in m0["leaves"]] == [c.blob for c in m8["leaves"]]
+        back = zipnn.decompress_pytree(m8, threads=8)
+        np.testing.assert_array_equal(
+            np.asarray(back["w"]).view(np.uint8),
+            np.asarray(tree["w"]).view(np.uint8),
+        )
+
+    def test_resolve_threads_semantics(self):
+        cores = os.cpu_count() or 1
+        assert engine.resolve_threads(None) == 1
+        assert engine.resolve_threads(0) == 1
+        assert engine.resolve_threads(1) == 1
+        assert engine.resolve_threads(6) == min(6, cores)   # capped at cores
+        assert engine.resolve_threads(-1) == cores
+        assert engine.get_pool(0) is None
+        pool = engine.get_pool(2)
+        assert pool is engine.get_pool(2)      # cached per worker count
+
+    def test_split_ids_partition(self):
+        for n, parts in [(0, 4), (1, 4), (7, 3), (64, 8), (5, 100)]:
+            rs = codec.split_ids(n, parts)
+            flat = [i for r in rs for i in r]
+            assert flat == list(range(n))
+            assert len(rs) <= max(parts, 1)
+
+
+class TestStreamingFiles:
+    def test_file_roundtrip_larger_than_window(self, tmp_path):
+        # > 4 windows, plus an unaligned TAIL remainder, plus an all-zero
+        # stretch wider than a window (ZERO planes mid-stream).
+        body = bytearray(_bf16_bytes(3_000_000, seed=1))
+        body[1_000_000:2_500_000] = bytes(1_500_000)
+        data = bytes(body) + b"\x07\x01\x03"            # len % 2 == 1 → TAIL
+        src, dst, back = (tmp_path / n for n in ("in.bin", "out.znns", "back.bin"))
+        src.write_bytes(data)
+
+        raw_b, comp_b = engine.compress_file(
+            str(src), str(dst), "bfloat16", window_bytes=1 << 20, threads=4
+        )
+        assert raw_b == len(data)
+        assert comp_b == dst.stat().st_size
+        assert comp_b < len(data)                       # zeros must compress
+
+        n = engine.decompress_file(str(dst), str(back), threads=4)
+        assert n == len(data)
+        assert back.read_bytes() == data
+
+    def test_stream_smaller_than_window(self, tmp_path):
+        data = _bf16_bytes(10_000, seed=2)
+        src = tmp_path / "small.bin"
+        src.write_bytes(data)
+        dst = tmp_path / "small.znns"
+        engine.compress_file(str(src), str(dst), "bfloat16")
+        with engine.DecompressReader(str(dst)) as r:
+            assert r.read() == data
+
+    def test_writer_reader_incremental_io(self):
+        # many small writes in, odd-sized reads out — exercises both buffers
+        data = _bf16_bytes(300_000, seed=4)
+        sink = io.BytesIO()
+        with zipnn.CompressWriter(sink, "bfloat16", window_bytes=1 << 17) as w:
+            for i in range(0, len(data), 9973):
+                w.write(data[i : i + 9973])
+        assert w.raw_bytes == len(data)
+        assert w.comp_bytes == len(sink.getvalue())
+
+        sink.seek(0)
+        r = zipnn.DecompressReader(sink)
+        assert r.dtype_name == "bfloat16"
+        out = bytearray()
+        while True:
+            piece = r.read(31337)
+            if not piece:
+                break
+            out += piece
+        assert bytes(out) == data
+
+    def test_empty_stream(self, tmp_path):
+        src = tmp_path / "empty.bin"
+        src.write_bytes(b"")
+        dst = tmp_path / "empty.znns"
+        raw_b, comp_b = engine.compress_file(str(src), str(dst), "float32")
+        assert raw_b == 0
+        with engine.DecompressReader(str(dst)) as r:
+            assert r.read() == b""
+
+    def test_truncated_stream_raises(self, tmp_path):
+        data = _bf16_bytes(100_000, seed=5)
+        src = tmp_path / "t.bin"
+        src.write_bytes(data)
+        dst = tmp_path / "t.znns"
+        engine.compress_file(str(src), str(dst), "bfloat16", window_bytes=1 << 17)
+        whole = dst.read_bytes()
+        clipped = tmp_path / "clipped.znns"
+        clipped.write_bytes(whole[: len(whole) - 40])
+        with pytest.raises(IOError):
+            with engine.DecompressReader(str(clipped)) as r:
+                r.read()
+
+    def test_mixed_read_then_frames_loses_nothing(self):
+        data = _bf16_bytes(250_000, seed=8)
+        sink = io.BytesIO()
+        with zipnn.CompressWriter(sink, "bfloat16", window_bytes=1 << 17) as w:
+            w.write(data)
+        sink.seek(0)
+        r = engine.DecompressReader(sink)
+        head = r.read(16)                       # buffers a partial frame
+        rest = b"".join(r.frames())             # must start from the buffer
+        assert head + rest == data
+
+    def test_missing_middle_frame_detected(self):
+        import struct
+
+        data = _bf16_bytes(250_000, seed=9)
+        sink = io.BytesIO()
+        with zipnn.CompressWriter(sink, "bfloat16", window_bytes=1 << 17) as w:
+            w.write(data)
+        blob = sink.getvalue()
+        frame = struct.Struct("<BQQI")
+        off = 32                                 # ZNS1 header size
+        spans = []
+        while True:
+            kind, _rl, cl, _crc = frame.unpack_from(blob, off)
+            spans.append((off, frame.size + cl, kind))
+            off += frame.size + cl
+            if kind == 0:
+                break
+        assert len(spans) > 2                    # multiple data frames
+        start, length, _ = spans[1]
+        cut = blob[:start] + blob[start + length :]   # drop 2nd data frame
+        with pytest.raises(IOError, match="end frame declares"):
+            engine.DecompressReader(io.BytesIO(cut)).read()
+
+    def test_interrupted_write_never_looks_complete(self):
+        # an exception inside the with-block must NOT finalize the stream:
+        # no buffered flush, no end frame → the reader rejects the file
+        data = _bf16_bytes(200_000, seed=7)
+        sink = io.BytesIO()
+        with pytest.raises(RuntimeError):
+            with zipnn.CompressWriter(sink, "bfloat16", window_bytes=1 << 17) as w:
+                w.write(data)
+                raise RuntimeError("interrupted mid-stream")
+        partial = io.BytesIO(sink.getvalue())
+        with pytest.raises(IOError):
+            zipnn.DecompressReader(partial).read()
+
+    def test_corrupt_frame_crc_raises(self, tmp_path):
+        data = _bf16_bytes(100_000, seed=6)
+        src = tmp_path / "c.bin"
+        src.write_bytes(data)
+        dst = tmp_path / "c.znns"
+        engine.compress_file(str(src), str(dst), "bfloat16", window_bytes=1 << 17)
+        blob = bytearray(dst.read_bytes())
+        blob[len(blob) // 2] ^= 0xFF                     # flip a payload byte
+        bad = tmp_path / "bad.znns"
+        bad.write_bytes(bytes(blob))
+        with pytest.raises(IOError):
+            with engine.DecompressReader(str(bad)) as r:
+                r.read()
+
+
+@pytest.mark.slow
+def test_large_file_roundtrip_bounded_memory(tmp_path):
+    """Synthetic checkpoint (default ~64 MiB; set ZIPNN_STREAM_TEST_MIB=512
+    for the acceptance-scale run) through a 4 MiB window: 16+ frames, peak
+    extra memory O(window) — the writer/reader never hold more than one
+    window of raw plus its compressed frame."""
+    mib = int(os.environ.get("ZIPNN_STREAM_TEST_MIB", "64"))
+    src = tmp_path / "big.bin"
+    rng = np.random.default_rng(9)
+    with open(src, "wb") as f:
+        for _ in range(mib // 4):
+            w = (rng.standard_normal(2_000_000) * 0.02).astype(ml_dtypes.bfloat16)
+            f.write(np.ascontiguousarray(w).view(np.uint8).tobytes())
+        f.write(b"\x01")                                 # unaligned tail
+    dst = tmp_path / "big.znns"
+    back = tmp_path / "back.bin"
+    raw_b, comp_b = engine.compress_file(
+        str(src), str(dst), "bfloat16", window_bytes=4 << 20, threads=2
+    )
+    assert raw_b == src.stat().st_size
+    assert comp_b < raw_b * 0.75                         # ~66 % paper ratio
+    assert engine.decompress_file(str(dst), str(back), threads=2) == raw_b
+    # spot-check equality without loading both files whole
+    with open(src, "rb") as a, open(back, "rb") as b:
+        while True:
+            ca, cb = a.read(1 << 20), b.read(1 << 20)
+            assert ca == cb
+            if not ca:
+                break
