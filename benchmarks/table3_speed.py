@@ -12,13 +12,22 @@ additionally runs the ZipNN rows through the engine's thread pool and
 reports the multi-thread sweep: blobs are asserted byte-identical to the
 single-thread run (the engine's determinism contract) and ratios are
 therefore identical by construction; only throughput changes.
+
+``--backend device|both`` additionally runs the ZipNN rows through the
+device plane-producer backend (fused Pallas dispatch, see
+core/device_plane.py) and **asserts byte-parity** against the host blobs —
+the backend knob's contract.  On a CPU-only host the kernels run in
+interpret mode, so device-row throughput is a correctness artifact, not a
+speed claim (flagged in the row).  Results are written to
+``BENCH_table3.json``.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
-from typing import List
+from typing import List, Sequence
 
 import numpy as np
 
@@ -41,12 +50,14 @@ def _timed(fn, *args, reps: int = 1):
     return out, best
 
 
-def run(threads: int = 1) -> List[dict]:
+def run(
+    threads: int = 1, backends: Sequence[str] = ("host",), n: int = N
+) -> List[dict]:
     rows = []
     models = [
-        ("Llama-3.1-like BF16", corpus.regular_bf16(N), "bfloat16"),
-        ("Olmo-like FP32", corpus.regular_fp32(N), "float32"),
-        ("xlm-RoBERTa-like FP32", corpus.clean_fp32(N), "float32"),
+        ("Llama-3.1-like BF16", corpus.regular_bf16(n), "bfloat16"),
+        ("Olmo-like FP32", corpus.regular_fp32(n), "float32"),
+        ("xlm-RoBERTa-like FP32", corpus.clean_fp32(n), "float32"),
     ]
     threads = engine.resolve_threads(threads)    # -1 → all cores, cap at cores
     sweep = [1] if threads <= 1 else [1, threads]
@@ -92,6 +103,31 @@ def run(threads: int = 1) -> List[dict]:
                  "comp_gbps": round(nb / t_c / 1e9, 3),
                  "decomp_gbps": round(nb / t_d / 1e9, 3)}
             )
+
+        if "device" in backends:
+            import jax
+
+            for nt in sweep:
+                dev_blob, t_c = _timed(
+                    lambda: zipnn.compress_bytes(
+                        raw, dtype, threads=nt, backend="device"
+                    ),
+                    reps=reps,
+                )
+                # backend contract: device blobs byte-identical to host
+                assert dev_blob == blob_1t, "device blob != host blob"
+                rows.append(
+                    {"model": name,
+                     "method": f"ZipNN(device, threads={nt})",
+                     "comp_pct": round(100 * len(dev_blob) / nb, 1),
+                     "comp_gbps": round(nb / t_c / 1e9, 3),
+                     "decomp_gbps": None,
+                     "parity": "byte-identical",
+                     "note": (
+                         "interpret-mode kernels (no TPU): parity check, "
+                         "not a speed claim"
+                     ) if jax.default_backend() != "tpu" else None}
+                )
     return rows
 
 
@@ -101,10 +137,41 @@ def main() -> None:
         "--threads", type=int, default=1,
         help="engine pool size for the ZipNN sweep (-1 = all cores)",
     )
+    ap.add_argument(
+        "--backend", choices=["host", "device", "both"], default="host",
+        help="plane-producer backends to sweep; device rows assert "
+             "byte-parity against host blobs",
+    )
+    ap.add_argument(
+        "--n", type=int, default=N,
+        help="elements per synthetic model (shrink for the CI parity smoke)",
+    )
+    ap.add_argument(
+        "--json", default="BENCH_table3.json",
+        help="result file (written on every run)",
+    )
     args = ap.parse_args()
-    rows = run(threads=args.threads)
+    backends = {
+        "host": ("host",), "device": ("host", "device"),
+        "both": ("host", "device"),
+    }[args.backend]
+    rows = run(threads=args.threads, backends=backends, n=args.n)
     for r in rows:
         print(r)
+    with open(args.json, "w") as f:
+        json.dump(
+            {
+                "bench": "table3_speed",
+                "n_elements": args.n,
+                "threads": engine.resolve_threads(args.threads),
+                "backends": list(backends),
+                "parity": "asserted" if "device" in backends else "n/a",
+                "rows": rows,
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {args.json}")
     n_threads = engine.resolve_threads(args.threads)
     if n_threads > 1:
         for model in {r["model"] for r in rows}:

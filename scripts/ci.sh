@@ -4,3 +4,9 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Fast host/device backend parity smoke: small corpus through the Table 3
+# sweep; asserts device blobs byte-identical to host blobs (interpret mode
+# on CPU-only hosts) and writes the result JSON.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
+    --backend both --n 120000 --json BENCH_table3_smoke.json

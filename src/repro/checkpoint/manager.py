@@ -46,11 +46,18 @@ class CheckpointConfig:
     # async_save: the save thread fans chunk work items across the pool.
     # 0/1 serial, N > 1 pool workers, -1 all cores (see core/engine.py).
     threads: int = 0
+    # Plane-producer backend for the compression front half: 'host' |
+    # 'device' | 'auto' (see core/device_plane.py).  'device' fuses
+    # rotate+byte-group+probe into one Pallas dispatch per save batch;
+    # checkpoint bytes are identical for every setting.
+    backend: str = "host"
     zipnn: zipnn.ZipNNConfig = dataclasses.field(default_factory=zipnn.ZipNNConfig)
 
     def __post_init__(self) -> None:
         if self.threads and not self.zipnn.threads:
             self.zipnn = dataclasses.replace(self.zipnn, threads=self.threads)
+        if self.backend != "host" and self.zipnn.plane_backend == "host":
+            self.zipnn = dataclasses.replace(self.zipnn, plane_backend=self.backend)
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:

@@ -2,7 +2,7 @@
 primary contribution), plus the baselines it is evaluated against."""
 
 from .bitlayout import BitLayout, LAYOUTS, layout_for, to_planes, from_planes, exponent_view
-from .codec import CodecParams, Method, longest_zero_run
+from .codec import CodecParams, Method, ProbeStats, longest_zero_run
 from .engine import (
     CompressWriter,
     DecompressReader,
@@ -29,7 +29,7 @@ from . import baselines
 
 __all__ = [
     "BitLayout", "LAYOUTS", "layout_for", "to_planes", "from_planes",
-    "exponent_view", "CodecParams", "Method", "longest_zero_run",
+    "exponent_view", "CodecParams", "Method", "ProbeStats", "longest_zero_run",
     "CompressWriter", "DecompressReader", "compress_file", "decompress_file",
     "get_pool", "resolve_threads",
     "ZipNNConfig", "CompressedTensor", "compress_array", "decompress_array",

@@ -31,10 +31,12 @@ __all__ = [
     "ChunkEntry",
     "PlaneCodec",
     "CodecParams",
+    "ProbeStats",
     "compress_plane",
     "decompress_plane",
     "longest_zero_run",
     "split_ids",
+    "table_probe_hist",
 ]
 
 # Work-item granularity for the thread-pool paths: several batches per
@@ -136,6 +138,43 @@ def hist256(a: np.ndarray) -> np.ndarray:
     return h
 
 
+def table_probe_hist(plane: np.ndarray) -> np.ndarray:
+    """Smoothed whole-plane histogram used for the Huffman table and the
+    §3.1 plane-level probes.
+
+    Built from a strided sample (≤ 4 MiB) with +1 smoothing on large planes
+    so every byte value keeps a code; ratio impact is < 0.1 % and the probe
+    cost drops ~10× on large planes.  One implementation shared by the host
+    path and the device plane-producer backend — the table (and therefore
+    every output byte) is identical no matter which backend probed.
+    """
+    n = plane.size
+    if n > (1 << 22):
+        stride = n // (1 << 22)
+        return hist256(plane[::stride]) * stride + 1
+    return hist256(plane) + (1 if n else 0)
+
+
+@dataclasses.dataclass
+class ProbeStats:
+    """Externally supplied probe statistics for one plane.
+
+    Produced by the device plane-producer backend (``core.device_plane``):
+    the per-chunk histograms come straight off the fused Pallas dispatch, so
+    :meth:`PlaneCodec.plan` consumes them without running ``hist256`` /
+    ``np.bincount`` at all — the GIL-bound probe disappears from the host
+    schedule.  Counts are exact, so the chosen methods (and the output
+    bytes) are identical to the host probe's.
+    """
+
+    chunk_hists: np.ndarray            # (n_chunks, 256) exact per-chunk counts
+    table_hist: np.ndarray             # == table_probe_hist(plane)
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.chunk_hists.shape[0])
+
+
 def longest_zero_run(chunk: np.ndarray) -> int:
     """Length of the longest run of zero bytes (vectorized)."""
     nz = np.flatnonzero(chunk)
@@ -196,13 +235,19 @@ class PlaneCodec:
     #                 pool path deterministic;
     #   finalize()    pass 3 — expansion fallback + metadata map.
 
-    def plan(self, plane: np.ndarray, pool=None) -> List[int]:
+    def plan(self, plane: np.ndarray, pool=None, probe: Optional[ProbeStats] = None) -> List[int]:
         """Pass 1: choose a method per chunk (probe + probe-skip logic).
 
         The per-chunk probe *statistics* (histogram → estimated size, zero
         run) are pure per-chunk work items and fan out across ``pool``; the
         probe-skip state machine that consumes them stays sequential, so the
         chosen methods are identical for any thread count.
+
+        When ``probe`` is supplied (the device plane-producer backend
+        already histogrammed every chunk on-accelerator), no histogram is
+        computed here at all — the whole pass 1 is a cheap host-side walk
+        over precomputed counts, and the chosen methods are identical
+        because the counts are exact.
         """
         p = self.params
         n = plane.size
@@ -210,20 +255,22 @@ class PlaneCodec:
 
         # Whole-plane fast path (§3.1): regular-model fraction planes are
         # incompressible — detect once, store raw, skip all per-chunk work.
-        # The histogram/table is built from a strided sample (≤ 4 MiB) with
-        # +1 smoothing so every byte value keeps a code; ratio impact is
-        # < 0.1 % and the probe cost drops ~10× on large planes.
-        if n > (1 << 22):
-            stride = n // (1 << 22)
-            hist = hist256(plane[::stride]) * stride + 1
-        else:
-            hist = hist256(plane) + (1 if n else 0)
+        # See table_probe_hist() for the sampled-histogram rationale.
+        hist = probe.table_hist if probe is not None else table_probe_hist(plane)
         if self.table is None:
             self.table = huffman.code_lengths(hist)
             self.codes = huffman.canonical_codes(self.table)
         hist_mass = max(int(hist.sum()), 1)
         est_plane = huffman.estimate_encoded_bits(hist, self.table) / 8.0
-        plane_zero = n > 0 and not plane.any()
+        if probe is not None:
+            if probe.n_chunks != n_chunks:
+                raise ValueError(
+                    f"probe has {probe.n_chunks} chunk histograms, plane has "
+                    f"{n_chunks} chunks"
+                )
+            plane_zero = n > 0 and int(probe.chunk_hists[:, 0].sum()) == n
+        else:
+            plane_zero = n > 0 and not plane.any()
         plane_incompressible = (
             not p.delta_mode and n > 0 and est_plane / hist_mass >= p.incompressible
         )
@@ -232,9 +279,12 @@ class PlaneCodec:
         if plane_incompressible:
             return [Method.STORE] * n_chunks
 
-        stats = _fan_out(
-            pool, n_chunks, lambda ids: self._chunk_stats(plane, ids)
-        )
+        if probe is not None:
+            stats = self._stats_from_probe(plane, probe)
+        else:
+            stats = _fan_out(
+                pool, n_chunks, lambda ids: self._chunk_stats(plane, ids)
+            )
 
         methods: List[int] = []
         skip = 0
@@ -264,6 +314,33 @@ class PlaneCodec:
                 else zeros
             )
             out.append((chunk.size, zeros, est, zrun))
+        return out
+
+    def _stats_from_probe(
+        self, plane: np.ndarray, probe: ProbeStats
+    ) -> List[Tuple[int, int, float, int]]:
+        """Per-chunk (n, zeros, est_bytes, zero_run) from device histograms.
+
+        Mirrors :meth:`_chunk_stats` exactly, except the counts come from
+        ``probe.chunk_hists`` instead of ``np.bincount``.  The zero-run
+        statistic (needed only for §4.2 delta chunks that are neither all-
+        nor mostly-zero) is not derivable from a histogram, so those chunks
+        fall back to the vectorized host scan — same values, same methods.
+        """
+        p = self.params
+        n = plane.size
+        out: List[Tuple[int, int, float, int]] = []
+        for c in range(probe.n_chunks):
+            hist = probe.chunk_hists[c]
+            size = min(p.chunk_bytes, n - c * p.chunk_bytes)
+            zeros = int(hist[0])
+            est = huffman.estimate_encoded_bits(hist, self.table) / 8.0
+            zrun = (
+                longest_zero_run(plane[c * p.chunk_bytes : (c + 1) * p.chunk_bytes])
+                if p.delta_mode and 0 < zeros < size
+                else zeros
+            )
+            out.append((size, zeros, est, zrun))
         return out
 
     def _method_from_stats(
@@ -340,11 +417,13 @@ class PlaneCodec:
         return entries
 
     def compress(
-        self, plane: np.ndarray, pool=None
+        self, plane: np.ndarray, pool=None, probe: Optional[ProbeStats] = None
     ) -> Tuple[List[ChunkEntry], List[bytes]]:
         """Compress one plane; ``pool`` (a ThreadPoolExecutor) fans the
-        encode work items across threads with deterministic ordering."""
-        methods = self.plan(plane, pool=pool)
+        encode work items across threads with deterministic ordering.
+        ``probe`` injects device-computed probe statistics (see
+        :class:`ProbeStats`) — bytes out are identical either way."""
+        methods = self.plan(plane, pool=pool, probe=probe)
         payloads = _fan_out(
             pool, len(methods), lambda ids: self.encode_ids(plane, methods, ids)
         )
@@ -438,11 +517,20 @@ class PlaneCodec:
 
 
 def compress_plane(
-    plane: np.ndarray, params: CodecParams, pool=None
+    plane: np.ndarray,
+    params: CodecParams,
+    pool=None,
+    probe: Optional[ProbeStats] = None,
 ) -> Tuple[List[ChunkEntry], List[bytes], Optional[bytes]]:
-    """One-shot plane compression. Returns (entries, payloads, table_blob)."""
+    """One-shot plane compression. Returns (entries, payloads, table_blob).
+
+    ``plane`` may come from anywhere — the host byte-split
+    (:func:`repro.core.bitlayout.to_planes`) or the device plane-producer
+    backend (:mod:`repro.core.device_plane`); with ``probe`` supplied the
+    probe pass consumes precomputed statistics instead of histogramming.
+    """
     codec = PlaneCodec(params)
-    entries, payloads = codec.compress(plane, pool=pool)
+    entries, payloads = codec.compress(plane, pool=pool, probe=probe)
     needs_table = any(e.method == Method.HUFF for e in entries)
     return entries, payloads, (codec.table_blob() if needs_table else None)
 

@@ -35,6 +35,31 @@ Every frame is an independent ``ZNN1`` container (same per-chunk work-item
 implementation as the in-memory path), so frames decompress independently
 and the unaligned remainder of the stream rides the last frame's ``TAIL``
 mechanism.  Threads apply *within* each frame.
+
+**Frame pipelining** — with ``threads > 1`` the writer double-buffers:
+window k compresses on a dedicated pipeline thread (fanning its (plane,
+chunk) work items across the engine pool) while the caller reads/buffers
+window k+1, and the reader symmetrically decodes frame k while frame k+1's
+bytes are read and CRC-checked.  Frames are still emitted/consumed strictly
+in order, so pipelining never changes the file bytes or the decoded stream.
+
+**Backend selection** — the codec's plane-producer front half (rotate +
+byte-group + probe) has two interchangeable backends, chosen by the
+``backend=`` knob threaded through :class:`repro.core.zipnn.ZipNNConfig`
+(``plane_backend``) and every compression entry point:
+
+* ``"host"`` (default) — numpy byte-split + ``np.bincount`` probe, fanned
+  across this module's thread pools;
+* ``"device"`` — one fused Pallas dispatch (XOR-delta → rotate+byte-group →
+  per-chunk histograms, see :mod:`repro.core.device_plane` /
+  :mod:`repro.kernels.fused_plane`) followed by a single device→host
+  transfer of planed uint8 buffers + probe stats; the entropy work items
+  then run with the probe pass already done.  Unsupported layout/chunk
+  combinations silently fall back to the host path;
+* ``"auto"`` — device only for accelerator-resident ``jax.Array`` leaves.
+
+Blobs are byte-identical for every backend × thread-count combination —
+both knobs change wall-clock only, never bytes.
 """
 
 from __future__ import annotations
@@ -54,6 +79,7 @@ __all__ = [
     "DecompressReader",
     "compress_file",
     "decompress_file",
+    "frame_records",
 ]
 
 DEFAULT_WINDOW = 64 << 20          # 64 MiB streaming window
@@ -130,6 +156,14 @@ class CompressWriter:
     + interpreter baseline), independent of stream length; the raw stream is
     never materialized.  Windows are aligned down to the dtype itemsize so
     only the final frame can carry an unaligned ``TAIL`` remainder.
+
+    With ``threads > 1`` the writer is **frame-pipelined**: one window's
+    compression runs on a dedicated pipeline thread (its (plane, chunk)
+    work items still fan across the engine pool) while the caller reads and
+    buffers the next window.  At most one frame is in flight, frames are
+    written strictly in submission order, and the compression itself is
+    deterministic — pipelined output files are byte-identical to serial
+    ones.  Peak extra memory grows by one in-flight window.
     """
 
     def __init__(
@@ -140,17 +174,25 @@ class CompressWriter:
         *,
         window_bytes: int = DEFAULT_WINDOW,
         threads: Optional[int] = None,
+        backend: Optional[str] = None,
     ):
         from . import bitlayout, zipnn   # lazy: zipnn imports this module
 
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if threads is None else threads
+        self._backend = backend
         self._dtype_name = dtype_name
         itemsize = bitlayout.layout_for(dtype_name).itemsize
         self._window = max(window_bytes - window_bytes % itemsize, itemsize)
         self._buf = bytearray()
         self._fp, self._own = _open(fp, "wb")
         self._closed = False
+        # Frame pipeline: a single-slot double buffer.  The in-flight frame
+        # compresses on this dedicated thread — NOT on the engine pool, so a
+        # writer can never deadlock the pool that its own chunk work items
+        # need — and is drained (written) before the next one is submitted.
+        self._pipe: Optional[ThreadPoolExecutor] = None
+        self._pending = None            # (raw_len, Future[bytes]) in flight
         self.raw_bytes = 0
         self.comp_bytes = 0
         hdr = _SHDR.pack(
@@ -166,32 +208,65 @@ class CompressWriter:
     def write(self, data: bytes) -> int:
         self._buf += data
         while len(self._buf) >= self._window:
-            self._emit(bytes(self._buf[: self._window]))
+            self._submit(bytes(self._buf[: self._window]))
             del self._buf[: self._window]
         return len(data)
 
-    def _emit(self, raw: bytes) -> None:
+    def _compress(self, raw: bytes) -> bytes:
         from . import zipnn
 
-        blob = zipnn.compress_bytes(
-            raw, self._dtype_name, self._config, threads=self._threads
+        return zipnn.compress_bytes(
+            raw, self._dtype_name, self._config,
+            threads=self._threads, backend=self._backend,
         )
+
+    def _submit(self, raw: bytes) -> None:
+        """Compress one window — pipelined when the engine is threaded."""
+        if resolve_threads(self._threads) <= 1:
+            self._write_frame(len(raw), self._compress(raw))
+            return
+        self._drain()
+        if self._pipe is None:
+            self._pipe = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="zipnn-frame-pipe"
+            )
+        self._pending = (len(raw), self._pipe.submit(self._compress, raw))
+
+    def _drain(self) -> None:
+        """Wait for the in-flight frame and write it (ordering barrier)."""
+        if self._pending is not None:
+            raw_len, fut = self._pending
+            self._pending = None
+            self._write_frame(raw_len, fut.result())
+
+    def _write_frame(self, raw_len: int, blob: bytes) -> None:
         self._fp.write(
-            _FRAME.pack(_KIND_DATA, len(raw), len(blob), zlib.crc32(blob))
+            _FRAME.pack(_KIND_DATA, raw_len, len(blob), zlib.crc32(blob))
         )
         self._fp.write(blob)
-        self.raw_bytes += len(raw)
+        self.raw_bytes += raw_len
         self.comp_bytes += _FRAME.size + len(blob)
 
     def close(self) -> None:
         if self._closed:
             return
-        if self._buf:
-            self._emit(bytes(self._buf))
-            self._buf.clear()
-        self._fp.write(_FRAME.pack(_KIND_END, self.raw_bytes, 0, 0))
-        self.comp_bytes += _FRAME.size
-        self._fp.flush()
+        try:
+            self._drain()
+            if self._buf:
+                self._write_frame(len(self._buf), self._compress(bytes(self._buf)))
+                self._buf.clear()
+            self._fp.write(_FRAME.pack(_KIND_END, self.raw_bytes, 0, 0))
+            self.comp_bytes += _FRAME.size
+            self._fp.flush()
+        except BaseException:
+            # A failed in-flight frame must not leak the fd/pipe thread, and
+            # must leave the stream without an end frame (abort semantics) so
+            # readers reject it.
+            self.abort()
+            raise
+        if self._pipe is not None:
+            self._pipe.shutdown(wait=True)
+            self._pipe = None
         if self._own:
             self._fp.close()
         self._closed = True
@@ -204,6 +279,17 @@ class CompressWriter:
         stream."""
         if self._closed:
             return
+        if self._pending is not None:
+            _, fut = self._pending
+            fut.cancel()
+            try:
+                fut.result()            # wait out an already-running frame
+            except BaseException:
+                pass                    # discarded either way
+            self._pending = None
+        if self._pipe is not None:
+            self._pipe.shutdown(wait=True)
+            self._pipe = None
         self._buf.clear()
         if self._own:
             self._fp.close()
@@ -226,6 +312,11 @@ class DecompressReader:
     decompressed window at a time — O(window) memory for any stream size.
     Frame CRCs are verified before decode; a truncated stream (no end frame)
     raises ``IOError``.
+
+    With ``threads > 1`` the reader **prefetches**: frame k decodes on a
+    dedicated pipeline thread (chunk work items on the engine pool) while
+    frame k+1's bytes are read and CRC-checked from the file — IO and codec
+    overlap, one frame in flight, decoded stream unchanged.
     """
 
     def __init__(
@@ -254,39 +345,73 @@ class DecompressReader:
         self._frames = self._frame_iter()
         self._exhausted = False
 
+    def _decode(self, blob: bytes) -> bytes:
+        from . import zipnn
+
+        return zipnn.decompress_bytes(blob, self._config, threads=self._threads)
+
     def _frame_iter(self) -> Iterator[bytes]:
         """Single shared generator over the file's frames (created once —
         ``read`` and ``frames`` both draw from it, so mixing them never
-        skips data)."""
-        from . import zipnn
+        skips data).
 
+        When the engine is threaded, frame k's decode is submitted to a
+        dedicated pipeline thread and resolved only after frame k+1's bytes
+        have been read and CRC-checked — the prefetch double buffer.  All
+        validation (CRC before decode, per-frame length after decode, total
+        length at the end frame) is unchanged.
+        """
+        use_pipe = resolve_threads(self._threads) > 1
+        pipe: Optional[ThreadPoolExecutor] = None
         total = 0
-        while True:
-            rec = self._fp.read(_FRAME.size)
-            if len(rec) < _FRAME.size:
-                raise IOError("truncated ZNS1 stream (missing end frame)")
-            kind, raw_len, comp_len, crc = _FRAME.unpack(rec)
-            if kind == _KIND_END:
-                # the end frame records the total raw length: a stream with
-                # whole frames missing must not parse as complete
-                if total != raw_len:
-                    raise IOError(
-                        f"ZNS1 stream yielded {total} bytes, end frame "
-                        f"declares {raw_len}"
-                    )
-                return
-            blob = self._fp.read(comp_len)
-            if len(blob) < comp_len:
-                raise IOError("truncated ZNS1 frame body")
-            if zlib.crc32(blob) != crc:
-                raise IOError("ZNS1 frame CRC mismatch")
-            raw = zipnn.decompress_bytes(blob, self._config, threads=self._threads)
+        pending = None                  # (future-or-blob, declared raw_len)
+
+        def resolve(p) -> bytes:
+            nonlocal total
+            item, raw_len = p
+            raw = item.result() if hasattr(item, "result") else self._decode(item)
             if len(raw) != raw_len:
                 raise IOError(
                     f"frame decoded to {len(raw)} bytes, expected {raw_len}"
                 )
             total += raw_len
-            yield raw
+            return raw
+
+        try:
+            while True:
+                rec = self._fp.read(_FRAME.size)
+                if len(rec) < _FRAME.size:
+                    raise IOError("truncated ZNS1 stream (missing end frame)")
+                kind, raw_len, comp_len, crc = _FRAME.unpack(rec)
+                if kind == _KIND_END:
+                    last = resolve(pending) if pending is not None else None
+                    pending = None
+                    # the end frame records the total raw length: a stream
+                    # with whole frames missing must not parse as complete
+                    if total != raw_len:
+                        raise IOError(
+                            f"ZNS1 stream yielded {total} bytes, end frame "
+                            f"declares {raw_len}"
+                        )
+                    if last is not None:
+                        yield last
+                    return
+                blob = self._fp.read(comp_len)
+                if len(blob) < comp_len:
+                    raise IOError("truncated ZNS1 frame body")
+                if zlib.crc32(blob) != crc:
+                    raise IOError("ZNS1 frame CRC mismatch")
+                if use_pipe and pipe is None:
+                    pipe = ThreadPoolExecutor(
+                        max_workers=1, thread_name_prefix="zipnn-frame-pipe"
+                    )
+                nxt = (pipe.submit(self._decode, blob) if pipe else blob, raw_len)
+                if pending is not None:
+                    yield resolve(pending)
+                pending = nxt
+        finally:
+            if pipe is not None:
+                pipe.shutdown(wait=False)
 
     def frames(self) -> Iterator[bytes]:
         """Yield the remaining decompressed frame bodies in stream order.
@@ -329,6 +454,32 @@ class DecompressReader:
         self.close()
 
 
+def frame_records(src: PathOrFile) -> Iterator[Tuple[int, int, bytes]]:
+    """Yield ``(raw_len, comp_len, blob)`` per data frame of a ``ZNS1``
+    container, without decoding — frame-level tooling (the hub's wire/codec
+    overlap model, integrity scanners) reads sizes and bodies through this.
+    One frame in memory at a time."""
+    fin, own = _open(src, "rb")
+    try:
+        hdr = fin.read(_SHDR.size)
+        if len(hdr) < _SHDR.size or _SHDR.unpack(hdr)[0] != _STREAM_MAGIC:
+            raise ValueError("not a ZNS1 stream")
+        while True:
+            rec = fin.read(_FRAME.size)
+            if len(rec) < _FRAME.size:
+                raise IOError("truncated ZNS1 stream (missing end frame)")
+            kind, raw_len, comp_len, _crc = _FRAME.unpack(rec)
+            if kind == _KIND_END:
+                return
+            blob = fin.read(comp_len)
+            if len(blob) < comp_len:
+                raise IOError("truncated ZNS1 frame body")
+            yield raw_len, comp_len, blob
+    finally:
+        if own:
+            fin.close()
+
+
 def compress_file(
     src: PathOrFile,
     dst: PathOrFile,
@@ -337,17 +488,20 @@ def compress_file(
     *,
     window_bytes: int = DEFAULT_WINDOW,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> Tuple[int, int]:
     """Stream-compress ``src`` into a ``ZNS1`` container at ``dst``.
 
     Reads/compresses/writes one window at a time — peak extra memory is
-    O(window), so checkpoints larger than RAM round-trip.  Returns
-    ``(raw_bytes, comp_bytes)``.
+    O(window), so checkpoints larger than RAM round-trip.  With threads the
+    read of window k+1 overlaps window k's compression (see
+    :class:`CompressWriter`).  Returns ``(raw_bytes, comp_bytes)``.
     """
     fin, own_in = _open(src, "rb")
     try:
         with CompressWriter(
-            dst, dtype_name, config, window_bytes=window_bytes, threads=threads
+            dst, dtype_name, config,
+            window_bytes=window_bytes, threads=threads, backend=backend,
         ) as w:
             while True:
                 data = fin.read(w._window)

@@ -20,12 +20,20 @@ Every entry point takes a ``threads=`` override (default: the config's
 ``threads`` field).  With N > 1, (plane, chunk) work items fan out across a
 shared thread pool (see :mod:`.engine`); output bytes are identical to the
 serial path for any thread count.
+
+Every *compression* entry point additionally takes a ``backend=`` override
+(default: the config's ``plane_backend``): ``"host"`` runs the rotate/
+byte-group/probe front half in numpy, ``"device"`` runs it as one fused
+Pallas dispatch with a single device→host transfer of planed buffers +
+probe stats (see :mod:`.device_plane`), ``"auto"`` picks device only for
+accelerator-resident leaves.  Blobs are byte-identical across backends ×
+thread counts — both knobs change wall-clock only.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -74,6 +82,12 @@ class ZipNNConfig:
     # (the reference implementation's ``max_threads``).  Blob bytes are
     # identical for every setting.
     threads: int = 0
+    # Plane-producer backend: 'host' (numpy rotate/split/probe), 'device'
+    # (fused Pallas dispatch + single transfer, host fallback when the
+    # layout/chunk combination is unsupported), or 'auto' (device only for
+    # accelerator-resident jax arrays).  Blob bytes are identical for every
+    # setting — see core/device_plane.py.
+    plane_backend: str = "host"
 
     def plane_params(self, itemsize: int, delta: bool = False) -> codec.CodecParams:
         return codec.CodecParams(
@@ -106,6 +120,53 @@ class CompressedTensor:
 # byte-stream compression
 # ---------------------------------------------------------------------------
 
+def _resolve_backend(
+    backend: Optional[str],
+    config: ZipNNConfig,
+    layout: bitlayout.BitLayout,
+    params: codec.CodecParams,
+    leaf: Any = None,
+) -> str:
+    """Collapse the backend knob to 'host' or 'device' for one leaf."""
+    requested = config.plane_backend if backend is None else backend
+    if requested == "host":
+        return "host"
+    from . import device_plane  # lazy: pulls in jax/Pallas
+
+    return device_plane.resolve(requested, layout, params, leaf=leaf)
+
+
+def _entropy_stage(
+    planes: Sequence[np.ndarray],
+    probes: Sequence[Optional[codec.ProbeStats]],
+    layout: bitlayout.BitLayout,
+    body_bytes: int,
+    rem: Optional[np.ndarray],
+    params: codec.CodecParams,
+    pool,
+    delta: bool,
+) -> bytes:
+    """Shared back half of every compression path: (plane, chunk) entropy
+    work items + container packing.  ``planes`` may come from the host
+    byte-split or the device plane producer; ``probes`` carry the device
+    path's precomputed per-chunk statistics (None ⇒ host probe)."""
+    tables: List[Optional[bytes]] = []
+    entries: List[List[codec.ChunkEntry]] = []
+    payloads: List[List[bytes]] = []
+    for plane, probe in zip(planes, probes):
+        e, p, t = codec.compress_plane(plane, params, pool=pool, probe=probe)
+        entries.append(e)
+        payloads.append(p)
+        tables.append(t)
+    blob = container.pack_stream(
+        layout.name, body_bytes, params.chunk_bytes, tables, entries, payloads,
+        delta=delta,
+    )
+    if rem is not None and rem.size:
+        blob += b"TAIL" + bytes(rem)
+    return blob
+
+
 def compress_bytes(
     raw: bytes | np.ndarray,
     dtype_name: str,
@@ -113,6 +174,7 @@ def compress_bytes(
     *,
     delta: bool = False,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> bytes:
     """Compress a raw little-endian byte stream interpreted as ``dtype_name``."""
     buf = np.frombuffer(raw, dtype=np.uint8) if isinstance(raw, (bytes, memoryview, bytearray)) else np.ascontiguousarray(raw, dtype=np.uint8)
@@ -120,24 +182,17 @@ def compress_bytes(
     tail = buf.size % layout.itemsize
     body, rem = (buf[: buf.size - tail], buf[buf.size - tail :]) if tail else (buf, None)
     pool = engine.get_pool(config.threads if threads is None else threads)
-    planes = bitlayout.to_planes(body, layout, pool=pool)
     params = config.plane_params(layout.itemsize, delta)
+    if body.size and _resolve_backend(backend, config, layout, params) == "device":
+        from . import device_plane
 
-    tables: List[Optional[bytes]] = []
-    entries: List[List[codec.ChunkEntry]] = []
-    payloads: List[List[bytes]] = []
-    for plane in planes:
-        e, p, t = codec.compress_plane(plane, params, pool=pool)
-        entries.append(e)
-        payloads.append(p)
-        tables.append(t)
-    blob = container.pack_stream(
-        layout.name, body.size, params.chunk_bytes, tables, entries, payloads,
-        delta=delta,
+        planes, probes = device_plane.produce_planes(body, layout, params)
+    else:
+        planes = bitlayout.to_planes(body, layout, pool=pool)
+        probes = [None] * len(planes)
+    return _entropy_stage(
+        planes, probes, layout, body.size, rem, params, pool, delta
     )
-    if rem is not None and rem.size:
-        blob += b"TAIL" + bytes(rem)
-    return blob
 
 
 def decompress_bytes(
@@ -181,12 +236,48 @@ def _to_numpy(arr: Any) -> np.ndarray:
     return np.ascontiguousarray(arr).reshape(shape)
 
 
+def _leaf_layout(arr: Any) -> Optional[bitlayout.BitLayout]:
+    """Layout for an array-like leaf, or None when it has no ZipNN layout."""
+    name = getattr(getattr(arr, "dtype", None), "name", None)
+    return bitlayout.LAYOUTS.get(name) if name else None
+
+
+def _leaf_nbytes(arr: Any) -> int:
+    """Raw byte size without forcing a device→host transfer."""
+    dt = getattr(arr, "dtype", None)
+    if dt is not None:
+        return int(np.size(arr)) * np.dtype(dt).itemsize
+    return int(np.asarray(arr).nbytes)
+
+
 def compress_array(
-    arr: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+    arr: Any,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> CompressedTensor:
+    layout = _leaf_layout(arr)
+    if layout is not None and np.size(arr):
+        params = config.plane_params(layout.itemsize)
+        if _resolve_backend(backend, config, layout, params, leaf=arr) == "device":
+            from . import device_plane
+
+            # Device leaves are planed in place: the only device→host
+            # transfer is the planed uint8 buffers + probe stats.
+            planes, probes = device_plane.produce_planes(arr, layout, params)
+            pool = engine.get_pool(config.threads if threads is None else threads)
+            n_bytes = int(np.size(arr)) * layout.itemsize
+            blob = _entropy_stage(
+                planes, probes, layout, n_bytes, None, params, pool, False
+            )
+            name = arr.dtype.name
+            return CompressedTensor(blob, name, tuple(np.shape(arr)))
+        backend = "host"             # resolved once; don't re-resolve below
     a = _to_numpy(arr)
     blob = compress_bytes(
-        a.reshape(-1).view(np.uint8), a.dtype.name, config, threads=threads
+        a.reshape(-1).view(np.uint8), a.dtype.name, config,
+        threads=threads, backend=backend,
     )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
@@ -205,21 +296,61 @@ def decompress_array(
 
 
 def compress_pytree(
-    tree: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+    tree: Any,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Compress every leaf of a pytree. Returns a manifest dict.
 
     Chunk-level parallelism applies within each leaf; leaves are walked in
     order so the manifest layout is deterministic.
+
+    With the device backend, same-dtype leaves are packed into **batched
+    multi-leaf dispatches** (see :mod:`.device_plane`): one kernel launch +
+    one transfer covers many small tensors, so per-leaf dispatch overhead
+    does not dominate real model trees.  Blobs per leaf are identical to
+    compressing each leaf alone on either backend.
     """
     import jax
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    comp = [compress_array(l, config, threads=threads) for l in leaves]
+    comp: List[Optional[CompressedTensor]] = [None] * len(leaves)
+
+    requested = config.plane_backend if backend is None else backend
+    if requested != "host" and leaves:
+        from . import device_plane
+
+        groups: Dict[str, List[int]] = {}
+        for i, leaf in enumerate(leaves):
+            layout = _leaf_layout(leaf)
+            if layout is None or not np.size(leaf):
+                continue
+            params = config.plane_params(layout.itemsize)
+            if device_plane.resolve(requested, layout, params, leaf=leaf) == "device":
+                groups.setdefault(leaf.dtype.name, []).append(i)
+        pool = engine.get_pool(config.threads if threads is None else threads)
+        for name, idxs in groups.items():
+            layout = bitlayout.LAYOUTS[name]
+            params = config.plane_params(layout.itemsize)
+            produced = device_plane.produce_planes_batched(
+                [leaves[i] for i in idxs], layout, params
+            )
+            for i, (planes, probes) in zip(idxs, produced):
+                n_bytes = int(np.size(leaves[i])) * layout.itemsize
+                blob = _entropy_stage(
+                    planes, probes, layout, n_bytes, None, params, pool, False
+                )
+                comp[i] = CompressedTensor(blob, name, tuple(np.shape(leaves[i])))
+
+    for i, leaf in enumerate(leaves):
+        if comp[i] is None:
+            comp[i] = compress_array(leaf, config, threads=threads, backend="host")
     return {
         "treedef": treedef,
         "leaves": comp,
-        "raw_bytes": sum(int(np.asarray(l).nbytes) for l in leaves),
+        "raw_bytes": sum(_leaf_nbytes(l) for l in leaves),
         "comp_bytes": sum(c.nbytes for c in comp),
     }
 
@@ -241,7 +372,12 @@ def decompress_pytree(
 # ---------------------------------------------------------------------------
 
 def delta_compress(
-    new: Any, base: Any, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
+    new: Any,
+    base: Any,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> CompressedTensor:
     """XOR-delta two same-shape tensors and compress the delta stream.
 
@@ -249,13 +385,39 @@ def delta_compress(
     extra bits (paper §4.2).  The delta stream is byte-grouped like a normal
     tensor — Fig. 8(b) shows per-byte-group change rates differ, so grouping
     helps deltas too — and the §4.2 Huffman/LZ auto-selection runs per chunk.
+
+    On the device backend the XOR itself is fused into the plane-producer
+    dispatch (rotation is a bit permutation, so it commutes with XOR): the
+    delta never materializes host-side, only its planes do.
     """
+    if np.shape(new) != np.shape(base) or getattr(new, "dtype", None) != getattr(
+        base, "dtype", None
+    ):
+        raise ValueError("delta requires matching shape/dtype")
+    layout = _leaf_layout(new)
+    if layout is not None and np.size(new):
+        params = config.plane_params(layout.itemsize, delta=True)
+        if _resolve_backend(backend, config, layout, params, leaf=new) == "device":
+            from . import device_plane
+
+            planes, probes = device_plane.produce_planes(
+                new, layout, params, base=base
+            )
+            pool = engine.get_pool(config.threads if threads is None else threads)
+            n_bytes = int(np.size(new)) * layout.itemsize
+            blob = _entropy_stage(
+                planes, probes, layout, n_bytes, None, params, pool, True
+            )
+            return CompressedTensor(blob, new.dtype.name, tuple(np.shape(new)))
+        backend = "host"             # resolved once; don't re-resolve below
     a = _to_numpy(new)
     b = _to_numpy(base)
     if a.shape != b.shape or a.dtype != b.dtype:
         raise ValueError("delta requires matching shape/dtype")
     x = np.bitwise_xor(a.reshape(-1).view(np.uint8), b.reshape(-1).view(np.uint8))
-    blob = compress_bytes(x, a.dtype.name, config, delta=True, threads=threads)
+    blob = compress_bytes(
+        x, a.dtype.name, config, delta=True, threads=threads, backend=backend
+    )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
 

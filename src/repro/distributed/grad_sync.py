@@ -38,19 +38,44 @@ class WireStats:
 
 
 class GradSync:
-    def __init__(self, config: zipnn.ZipNNConfig = zipnn.DEFAULT):
+    """Engine-aware gradient packer.
+
+    ``threads`` fans the codec's (plane, chunk) work items across the
+    engine's shared pool; ``backend`` selects the plane-producer path
+    ('host' | 'device' | 'auto' — see ``core/device_plane.py``).  Gradient
+    payloads reuse the exact same codec work items as checkpoints, so both
+    knobs apply unchanged and wire bytes are identical for every setting.
+    """
+
+    def __init__(
+        self,
+        config: zipnn.ZipNNConfig = zipnn.DEFAULT,
+        *,
+        threads: int | None = None,
+        backend: str | None = None,
+    ):
         self.config = config
+        self.threads = threads
+        self.backend = backend
 
     def pack(self, grads: PyTree) -> Tuple[Dict[str, Any], WireStats]:
         import time
 
         t0 = time.perf_counter()
-        manifest = zipnn.compress_pytree(jax.device_get(grads), self.config)
+        # Host backend: one batched tree fetch up front (cheaper than a
+        # per-leaf synchronous D2H copy inside compress_array).  Device /
+        # auto: leaves stay put — accelerator-resident tensors are planed on
+        # device (batched multi-leaf dispatch) and only planed bytes cross.
+        be = self.backend if self.backend is not None else self.config.plane_backend
+        tree = jax.device_get(grads) if be == "host" else grads
+        manifest = zipnn.compress_pytree(
+            tree, self.config, threads=self.threads, backend=self.backend
+        )
         dt = time.perf_counter() - t0
         return manifest, WireStats(manifest["raw_bytes"], manifest["comp_bytes"], dt)
 
     def unpack(self, manifest: Dict[str, Any]) -> PyTree:
-        return zipnn.decompress_pytree(manifest, self.config)
+        return zipnn.decompress_pytree(manifest, self.config, threads=self.threads)
 
     def exchange(
         self, grads: PyTree, n_peers: int, link_gbps: float = 1.0

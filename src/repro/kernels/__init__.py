@@ -1,16 +1,20 @@
 """Pallas TPU kernels for the ZipNN compression hot path.
 
 Kernels (each: <name>.py kernel + ref.py oracle + ops.py wrapper):
-  * bytegroup — exponent-extraction / byte-group transform (Fig. 3/5)
-  * histogram — 256-bin byte histogram (table building, probes)
-  * bitpack   — parallel Huffman bit-packing (encode hot loop)
-  * xor_delta — checkpoint XOR delta + changed-byte count (§4.2)
+  * bytegroup   — exponent-extraction / byte-group transform (Fig. 3/5)
+  * histogram   — 256-bin byte histogram, whole-array and per-chunk
+                  (table building, compressibility probes)
+  * bitpack     — parallel Huffman bit-packing (encode hot loop)
+  * xor_delta   — checkpoint XOR delta + changed-byte count (§4.2)
+  * fused_plane — one-dispatch composition of xor_delta + bytegroup +
+                  per-chunk histogram: the engine's device plane-producer
+                  backend (see ``core.device_plane``)
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU in interpret mode against the pure-jnp oracles.
 """
 
-from . import ops, ref
+from . import fused_plane, ops, ref
 from .ops import (
     bytegroup_bf16,
     ungroup_bf16,
@@ -22,6 +26,7 @@ from .ops import (
 )
 
 __all__ = [
-    "ops", "ref", "bytegroup_bf16", "ungroup_bf16", "bytegroup_fp32",
-    "ungroup_fp32", "byte_histogram", "xor_delta_u32", "huffman_encode_chunks",
+    "ops", "ref", "fused_plane", "bytegroup_bf16", "ungroup_bf16",
+    "bytegroup_fp32", "ungroup_fp32", "byte_histogram", "xor_delta_u32",
+    "huffman_encode_chunks",
 ]

@@ -1,0 +1,87 @@
+"""Fused device plane producer: the compression front half in ONE dispatch.
+
+The host compression pipeline spends its pre-entropy time in three passes
+over the tensor bytes — rotate+byte-group (``bytegroup``), optional XOR
+delta (``xor_delta``), and the per-chunk compressibility probe histogram
+(``histogram``).  Run separately they each round-trip HBM; run host-side
+they serialize on the GIL (``np.bincount``).  This module composes the
+three Pallas kernels under a single ``jax.jit`` so XLA schedules them as
+one device dispatch: uint lanes in, uint8 byte-group planes + per-chunk
+256-bin probe histograms out.  The caller then does a single device→host
+transfer and hands the planes straight to the entropy work items
+(``core.codec``), with ``hist256``/``np.bincount`` never touching the
+probe path.
+
+Alignment contract (enforced by ``core.device_plane``):
+
+* input is a flat uint16/uint32 element array padded with zeros and
+  reshaped to ``(M, 128)``;
+* the per-plane chunk size ``chunk_elems`` divides ``M * 128`` and is a
+  multiple of the histogram block (``HIST_ROWS * 128`` bytes);
+* ``M`` is a multiple of every constituent kernel's row block, so no
+  kernel sees a partial block.
+
+Zero padding is invariant under all three stages (``rotl1(0) == 0``,
+``0 ^ 0 == 0``), so pad bytes only ever inflate bin 0 of the final chunk's
+histogram — the host corrects that with one subtraction.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bytegroup, histogram, xor_delta
+
+LANES = 128
+
+# Row-block alignment (in elements) the padded input must satisfy: the
+# byte-group rows and the XOR rows both divide it.
+ALIGN_ELEMS_U16 = max(bytegroup.BF16_ROWS, xor_delta.XOR_ROWS) * LANES
+ALIGN_ELEMS_U32 = max(bytegroup.FP32_ROWS, xor_delta.XOR_ROWS) * LANES
+# Per-plane chunk sizes must be whole histogram blocks.
+CHUNK_ALIGN_BYTES = histogram.HIST_ROWS * LANES
+
+
+@functools.partial(
+    jax.jit, static_argnames=("itemsize", "chunk_elems", "interpret")
+)
+def plane_producer(
+    x: jax.Array,
+    base: Optional[jax.Array] = None,
+    *,
+    itemsize: int,
+    chunk_elems: int,
+    interpret: bool = True,
+) -> Tuple[Tuple[jax.Array, ...], jax.Array]:
+    """(optional XOR with ``base``) → rotate+byte-group → per-chunk hists.
+
+    Args:
+      x: uint16/uint32 ``(M, 128)`` element grid (zero-padded).
+      base: same-shape base for the §4.2 XOR-delta path, or None.
+      itemsize: 2 or 4 — selects the byte-group kernel.
+      chunk_elems: per-plane codec chunk size in elements (== bytes, since
+        every element contributes one byte per plane).
+
+    Returns:
+      (planes, chunk_hists): ``itemsize`` uint8 ``(M, 128)`` planes, plane 0
+      the exponent byte, and int32 ``(n_chunks, itemsize, 256)`` histograms
+      where ``n_chunks = M * 128 // chunk_elems``.
+    """
+    if base is not None:
+        x = xor_delta.xor_elems_2d(x, base, interpret=interpret)
+    if itemsize == 2:
+        planes = bytegroup.bytegroup_bf16_2d(x, interpret=interpret)
+    elif itemsize == 4:
+        planes = bytegroup.bytegroup_fp32_2d(x, interpret=interpret)
+    else:
+        raise ValueError(f"fused plane producer: unsupported itemsize {itemsize}")
+    chunk_rows = chunk_elems // LANES
+    hists = [
+        histogram.chunk_histogram_2d(p, chunk_rows=chunk_rows, interpret=interpret)
+        for p in planes
+    ]
+    return tuple(planes), jnp.stack(hists, axis=1)

@@ -75,6 +75,15 @@ def histogram(x: jnp.ndarray) -> jnp.ndarray:
     )
 
 
+def chunk_histogram(x: jnp.ndarray, chunk_elems: int) -> jnp.ndarray:
+    """uint8[N] (N % chunk_elems == 0) -> int32[N // chunk_elems, 256]."""
+    x = x.reshape(-1, chunk_elems).astype(jnp.int32)
+    bins = jnp.arange(256, dtype=jnp.int32)
+    return jnp.sum(
+        (x[:, None, :] == bins[None, :, None]).astype(jnp.int32), axis=2
+    )
+
+
 # ---------------------------------------------------------------------------
 # Huffman bit-pack
 # ---------------------------------------------------------------------------

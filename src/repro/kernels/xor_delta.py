@@ -31,6 +31,30 @@ def _xor_kernel(a_ref, b_ref, d_ref, cnt_ref):
     cnt_ref[0] += changed
 
 
+def _xor_elems_kernel(a_ref, b_ref, d_ref):
+    d_ref[...] = jnp.bitwise_xor(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def xor_elems_2d(a: jax.Array, b: jax.Array, *, interpret: bool = True):
+    """Elementwise XOR at the operand dtype width (uint16/uint32).
+
+    The counting variant below serves the Fig. 8(a) statistic; this plain
+    variant feeds the fused plane producer (``kernels.fused_plane``), where
+    the per-chunk zero counts come from the chunk histograms instead — no
+    second reduction needed.  ``a.shape[0] % XOR_ROWS == 0`` required.
+    """
+    m = a.shape[0]
+    return pl.pallas_call(
+        _xor_elems_kernel,
+        grid=(m // XOR_ROWS,),
+        in_specs=[pl.BlockSpec((XOR_ROWS, LANES), lambda i: (i, 0))] * 2,
+        out_specs=pl.BlockSpec((XOR_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def xor_delta_2d(a: jax.Array, b: jax.Array, *, interpret: bool = True):
     """(uint32[M,128], uint32[M,128]) → (delta uint32[M,128], int32[1])."""

@@ -1,0 +1,379 @@
+"""Device plane-producer backend: byte-parity with the host path.
+
+The contract under test (ISSUE 2): for every backend × thread-count
+combination the output blobs are **byte-identical** — the knobs change
+wall-clock only.  Device kernels run in interpret mode on CPU, so these are
+exact-semantics tests, not speed tests.
+"""
+
+import io
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import bitlayout, codec, device_plane, engine, zipnn
+
+
+def _bf16(n, seed=0, scale=0.02):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(ml_dtypes.bfloat16)
+
+
+def _fp32(n, seed=0, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+def _probe_for(plane, cb):
+    n_chunks = -(-plane.size // cb)
+    hists = np.stack(
+        [
+            np.bincount(plane[c * cb : (c + 1) * cb], minlength=256)
+            for c in range(n_chunks)
+        ]
+    )
+    return codec.ProbeStats(
+        chunk_hists=hists, table_hist=codec.table_probe_hist(plane)
+    )
+
+
+class TestBlobParity:
+    @pytest.mark.parametrize("threads", [1, 4])
+    @pytest.mark.parametrize(
+        "dtype,n",
+        [("bfloat16", 300_001), ("float32", 150_003)],  # odd/unaligned sizes
+    )
+    def test_bytes_parity(self, dtype, n, threads):
+        arr = _bf16(n, seed=1) if dtype == "bfloat16" else _fp32(n, seed=1)
+        raw = np.ascontiguousarray(arr).view(np.uint8).tobytes()
+        host = zipnn.compress_bytes(raw, dtype, threads=threads, backend="host")
+        dev = zipnn.compress_bytes(raw, dtype, threads=threads, backend="device")
+        assert host == dev
+        assert zipnn.decompress_bytes(dev, threads=threads) == raw
+
+    def test_unaligned_tail_parity(self):
+        raw = np.ascontiguousarray(_bf16(70_000, seed=2)).view(np.uint8).tobytes()
+        raw = raw + b"\x05"                          # odd byte count → TAIL
+        host = zipnn.compress_bytes(raw, "bfloat16")
+        dev = zipnn.compress_bytes(raw, "bfloat16", backend="device")
+        assert host == dev
+        assert zipnn.decompress_bytes(dev) == raw
+
+    @pytest.mark.parametrize("threads", [1, 4])
+    def test_delta_parity(self, threads):
+        base = _bf16(200_000, seed=3)
+        new = np.asarray(base).copy()
+        idx = np.random.default_rng(4).integers(0, new.size, new.size // 50)
+        new[idx] = (np.asarray(new[idx], np.float32) * 1.01).astype(
+            ml_dtypes.bfloat16
+        )
+        host = zipnn.delta_compress(new, base, threads=threads, backend="host")
+        dev = zipnn.delta_compress(new, base, threads=threads, backend="device")
+        assert host.blob == dev.blob
+        back = zipnn.delta_decompress(dev, base, threads=threads)
+        np.testing.assert_array_equal(
+            back.view(np.uint8), np.ascontiguousarray(new).view(np.uint8)
+        )
+
+    def test_delta_fp32_all_zero_delta(self):
+        base = _fp32(100_000, seed=5)
+        host = zipnn.delta_compress(base, base, backend="host")
+        dev = zipnn.delta_compress(base, base, backend="device")
+        assert host.blob == dev.blob
+        assert host.nbytes < base.nbytes * 0.01      # ZERO planes
+
+    def test_jax_array_leaf(self):
+        arr = jnp.asarray(_bf16(100_000, seed=6))
+        host = zipnn.compress_array(np.asarray(arr), backend="host")
+        dev = zipnn.compress_array(arr, backend="device")
+        assert host.blob == dev.blob
+        back = zipnn.decompress_array(dev)
+        np.testing.assert_array_equal(
+            back.view(np.uint8), np.asarray(arr).view(np.uint8)
+        )
+
+    def test_pytree_batched_parity(self):
+        tree = {
+            "wte": _bf16(70_000, seed=7).reshape(700, 100),
+            "tiny": [_bf16(33, seed=8), _bf16(1, seed=9)],
+            "zeros": np.zeros(40_000, ml_dtypes.bfloat16),
+            "f32": _fp32(20_000, seed=10),
+            "int": np.arange(100, dtype=np.int32),   # non-rotated → host
+            "step": np.asarray(7, dtype=np.int32),
+        }
+        host = zipnn.compress_pytree(tree, backend="host")
+        dev = zipnn.compress_pytree(tree, backend="device")
+        assert [c.blob for c in host["leaves"]] == [c.blob for c in dev["leaves"]]
+        back = zipnn.decompress_pytree(dev)
+        import jax
+
+        for a, b in zip(
+            jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_unsupported_chunk_size_falls_back_to_host(self):
+        # chunk too small for whole histogram blocks → silent host fallback
+        cfg = zipnn.ZipNNConfig(chunk_param_bytes=1 << 12)
+        arr = _bf16(50_000, seed=11)
+        host = zipnn.compress_array(arr, cfg, backend="host")
+        dev = zipnn.compress_array(arr, cfg, backend="device")
+        assert host.blob == dev.blob
+
+    def test_auto_is_host_for_host_data(self):
+        resolved = device_plane.resolve(
+            "auto",
+            bitlayout.layout_for("bfloat16"),
+            zipnn.DEFAULT.plane_params(2),
+            leaf=_bf16(10, seed=12),
+        )
+        assert resolved == "host"
+
+
+class TestProbeInjection:
+    """plan() consumes supplied ProbeStats for every Method, without any
+    histogramming of its own."""
+
+    def _parity(self, plane, params):
+        pc_probe = codec.PlaneCodec(params)
+        pc_host = codec.PlaneCodec(params)
+        probe = _probe_for(plane, params.chunk_bytes)
+        m_probe = pc_probe.plan(plane, probe=probe)
+        m_host = pc_host.plan(plane)
+        assert m_probe == m_host
+        e1, p1 = pc_probe.compress(plane, probe=probe)
+        e2, p2 = pc_host.compress(plane)
+        assert p1 == p2 and e1 == e2
+        return m_probe
+
+    def test_store_plane(self):
+        plane = np.random.default_rng(0).integers(0, 256, 1 << 16).astype(np.uint8)
+        m = self._parity(plane, codec.CodecParams(chunk_bytes=1 << 14))
+        assert set(m) == {codec.Method.STORE}
+
+    def test_zero_plane(self):
+        plane = np.zeros(1 << 16, np.uint8)
+        m = self._parity(plane, codec.CodecParams(chunk_bytes=1 << 14))
+        assert set(m) == {codec.Method.ZERO}
+
+    def test_huff_plane(self):
+        rng = np.random.default_rng(1)
+        plane = rng.choice(12, 1 << 16).astype(np.uint8) + 1
+        m = self._parity(plane, codec.CodecParams(chunk_bytes=1 << 14))
+        assert codec.Method.HUFF in m
+
+    def test_hufflib_plane(self):
+        rng = np.random.default_rng(2)
+        plane = rng.choice(12, 1 << 16).astype(np.uint8) + 1
+        m = self._parity(
+            plane, codec.CodecParams(chunk_bytes=1 << 14, backend="hufflib")
+        )
+        assert codec.Method.HUFFLIB in m
+
+    def test_zlib_delta_plane(self):
+        rng = np.random.default_rng(3)
+        plane = np.zeros(1 << 16, np.uint8)
+        plane[:: 97] = rng.integers(1, 255, plane[::97].size)  # >90 % zeros
+        m = self._parity(plane, codec.CodecParams(chunk_bytes=1 << 14, delta_mode=True))
+        assert codec.Method.ZLIB in m
+
+    def test_zlib_zero_run_delta_plane(self):
+        rng = np.random.default_rng(4)
+        plane = rng.integers(1, 255, 1 << 16).astype(np.uint8)
+        plane[1000:3000] = 0                       # long run, zeros < 90 %
+        m = self._parity(plane, codec.CodecParams(chunk_bytes=1 << 14, delta_mode=True))
+        assert codec.Method.ZLIB in m
+
+    def test_plan_never_histograms_with_probe(self, monkeypatch):
+        """Acceptance criterion: plan() computes no hist256/bincount when
+        probe stats are supplied by the device path."""
+        rng = np.random.default_rng(5)
+        plane = rng.choice(12, 1 << 16).astype(np.uint8)
+        params = codec.CodecParams(chunk_bytes=1 << 14)
+        probe = _probe_for(plane, params.chunk_bytes)
+
+        def boom(*a, **k):
+            raise AssertionError("plan() must not histogram with probe stats")
+
+        monkeypatch.setattr(codec, "hist256", boom)
+        monkeypatch.setattr(codec.np, "bincount", boom)
+        pc = codec.PlaneCodec(params)
+        methods = pc.plan(plane, probe=probe)
+        assert len(methods) == 4
+
+    def test_probe_chunk_count_mismatch_raises(self):
+        plane = np.zeros(1 << 16, np.uint8)
+        params = codec.CodecParams(chunk_bytes=1 << 14)
+        probe = _probe_for(plane[: 1 << 15], params.chunk_bytes)
+        with pytest.raises(ValueError, match="chunk histograms"):
+            codec.PlaneCodec(params).plan(plane, probe=probe)
+
+
+class TestDevicePlaneModule:
+    def test_batched_matches_single(self):
+        layout = bitlayout.layout_for("bfloat16")
+        params = zipnn.DEFAULT.plane_params(2)
+        leaves = [_bf16(40_000, seed=20), _bf16(5, seed=21), _bf16(131_072, seed=22)]
+        batched = device_plane.produce_planes_batched(leaves, layout, params)
+        for leaf, (planes_b, probes_b) in zip(leaves, batched):
+            planes_s, probes_s = device_plane.produce_planes(leaf, layout, params)
+            for pb, ps in zip(planes_b, planes_s):
+                np.testing.assert_array_equal(pb, ps)
+            for qb, qs in zip(probes_b, probes_s):
+                np.testing.assert_array_equal(qb.chunk_hists, qs.chunk_hists)
+                np.testing.assert_array_equal(qb.table_hist, qs.table_hist)
+
+    def test_probe_hists_match_bincount(self):
+        layout = bitlayout.layout_for("float32")
+        params = zipnn.DEFAULT.plane_params(4)
+        leaf = _fp32(100_000, seed=23)
+        planes, probes = device_plane.produce_planes(leaf, layout, params)
+        for plane, probe in zip(planes, probes):
+            expected = _probe_for(plane, params.chunk_bytes)
+            np.testing.assert_array_equal(probe.chunk_hists, expected.chunk_hists)
+            np.testing.assert_array_equal(probe.table_hist, expected.table_hist)
+
+    def test_unsupported_layouts(self):
+        params = zipnn.DEFAULT.plane_params(4)
+        assert not device_plane.supports(bitlayout.layout_for("int32"), params)
+        assert not device_plane.supports(bitlayout.layout_for("uint8"), params)
+        assert device_plane.supports(bitlayout.layout_for("float32"), params)
+        assert device_plane.supports(bitlayout.layout_for("bfloat16"), zipnn.DEFAULT.plane_params(2))
+
+    def test_resolve_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown plane backend"):
+            device_plane.resolve(
+                "gpu", bitlayout.layout_for("float32"), zipnn.DEFAULT.plane_params(4)
+            )
+
+
+class TestPipelinedStreaming:
+    def test_pipelined_file_identical_to_serial(self, tmp_path):
+        data = np.ascontiguousarray(_bf16(600_000, seed=30)).view(np.uint8).tobytes()
+        src = tmp_path / "in.bin"
+        src.write_bytes(data)
+        s_path, p_path = tmp_path / "serial.znns", tmp_path / "piped.znns"
+        engine.compress_file(str(src), str(s_path), "bfloat16", window_bytes=1 << 18)
+        engine.compress_file(
+            str(src), str(p_path), "bfloat16", window_bytes=1 << 18, threads=4
+        )
+        assert s_path.read_bytes() == p_path.read_bytes()
+        back = tmp_path / "back.bin"
+        assert engine.decompress_file(str(p_path), str(back), threads=4) == len(data)
+        assert back.read_bytes() == data
+
+    def test_pipelined_writer_incremental(self):
+        data = np.ascontiguousarray(_bf16(300_000, seed=31)).view(np.uint8).tobytes()
+        serial, piped = io.BytesIO(), io.BytesIO()
+        for sink, threads in ((serial, 0), (piped, 4)):
+            with engine.CompressWriter(
+                sink, "bfloat16", window_bytes=1 << 17, threads=threads
+            ) as w:
+                for i in range(0, len(data), 9973):
+                    w.write(data[i : i + 9973])
+        assert serial.getvalue() == piped.getvalue()
+
+    def test_pipelined_abort_discards_pending(self):
+        data = np.ascontiguousarray(_bf16(200_000, seed=32)).view(np.uint8).tobytes()
+        sink = io.BytesIO()
+        with pytest.raises(RuntimeError):
+            with engine.CompressWriter(
+                sink, "bfloat16", window_bytes=1 << 17, threads=4
+            ) as w:
+                w.write(data)
+                raise RuntimeError("boom")
+        with pytest.raises(IOError):
+            engine.DecompressReader(io.BytesIO(sink.getvalue())).read()
+
+    def test_device_backend_through_writer(self, tmp_path):
+        data = np.ascontiguousarray(_bf16(300_000, seed=33)).view(np.uint8).tobytes()
+        src = tmp_path / "in.bin"
+        src.write_bytes(data)
+        h, d = tmp_path / "h.znns", tmp_path / "d.znns"
+        engine.compress_file(str(src), str(h), "bfloat16", window_bytes=1 << 18)
+        engine.compress_file(
+            str(src), str(d), "bfloat16", window_bytes=1 << 18, backend="device"
+        )
+        assert h.read_bytes() == d.read_bytes()
+
+    def test_frame_records(self, tmp_path):
+        data = np.ascontiguousarray(_bf16(300_000, seed=34)).view(np.uint8).tobytes()
+        src, dst = tmp_path / "in.bin", tmp_path / "out.znns"
+        src.write_bytes(data)
+        engine.compress_file(str(src), str(dst), "bfloat16", window_bytes=1 << 18)
+        recs = list(engine.frame_records(str(dst)))
+        assert sum(r[0] for r in recs) == len(data)
+        assert all(len(r[2]) == r[1] for r in recs)
+        assert len(recs) >= 2
+
+
+class TestEngineAwareSubsystems:
+    def test_grad_sync_knobs_lossless_and_identical(self):
+        import jax
+
+        from repro.distributed.grad_sync import GradSync
+
+        tree = {
+            "w": _bf16(60_000, seed=40).reshape(300, 200),
+            "b": np.zeros(256, np.float32),
+        }
+        plain, _ = GradSync().pack(tree)
+        gs = GradSync(threads=4, backend="device")
+        manifest, stats = gs.pack(tree)
+        assert [c.blob for c in manifest["leaves"]] == [
+            c.blob for c in plain["leaves"]
+        ]
+        back = gs.unpack(manifest)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert stats.comp_bytes < stats.raw_bytes
+
+    def test_checkpoint_manager_backend_parity(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+        state = {
+            "w": _bf16(50_000, seed=41),
+            "opt": {"m": _fp32(20_000, seed=42)},
+        }
+        mgrs = {}
+        for name, backend in (("host", "host"), ("dev", "device")):
+            cfg = CheckpointConfig(
+                directory=str(tmp_path / name), backend=backend, async_save=False
+            )
+            m = CheckpointManager(cfg)
+            m.save(1, state, blocking=True)
+            mgrs[name] = m
+        h = (tmp_path / "host" / "step_1" / "data.bin").read_bytes()
+        d = (tmp_path / "dev" / "step_1" / "data.bin").read_bytes()
+        assert h == d
+        step, back = mgrs["dev"].restore()
+        assert step == 1
+        np.testing.assert_array_equal(
+            np.asarray(back["w"]).view(np.uint8),
+            np.ascontiguousarray(state["w"]).view(np.uint8),
+        )
+
+    def test_hub_overlapped_report(self, tmp_path):
+        from repro.checkpoint import hub
+
+        data = np.ascontiguousarray(_bf16(400_000, seed=43)).view(np.uint8).tobytes()
+        src = tmp_path / "model.bin"
+        src.write_bytes(data)
+        rep = hub.simulate_file_transfer(
+            str(src), "bfloat16", "first_download_home",
+            window_bytes=1 << 18, threads=2,
+        )
+        assert rep.total_comp_overlap_s > 0
+        assert rep.codec_overlap_s >= 0
+        # the pipeline always pays full wire time; it can only hide codec
+        assert rep.total_comp_overlap_s >= rep.wire_comp_s - 1e-12
+        assert rep.overlapped_speedup > 0
+        seq_rep = hub.simulate_transfer(
+            data, "bfloat16", "first_download_home", backend="device"
+        )
+        assert seq_rep.total_comp_overlap_s == 0.0
+        assert seq_rep.overlapped_speedup == seq_rep.speedup

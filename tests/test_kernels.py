@@ -164,3 +164,83 @@ class TestBitpack:
         blobs = ops.huffman_encode_chunks(data, lens, codes, chunk_syms=8192)
         decoded = huffman.decode_many(blobs, [8192], lens)
         np.testing.assert_array_equal(decoded[0], data)
+
+
+class TestChunkHistogram:
+    @pytest.mark.parametrize("chunks", [1, 2, 5])
+    def test_vs_bincount_and_oracle(self, chunks):
+        from repro.kernels import histogram as hist_k
+
+        chunk_elems = hist_k.HIST_ROWS * 128 * 2          # 2 blocks per chunk
+        n = chunks * chunk_elems
+        x = np.random.default_rng(chunks).integers(0, 256, n).astype(np.uint8)
+        kh = np.asarray(
+            hist_k.chunk_histogram_2d(
+                jnp.asarray(x).reshape(-1, 128),
+                chunk_rows=chunk_elems // 128,
+                interpret=True,
+            )
+        )
+        assert kh.shape == (chunks, 256)
+        for c in range(chunks):
+            np.testing.assert_array_equal(
+                kh[c],
+                np.bincount(x[c * chunk_elems : (c + 1) * chunk_elems], minlength=256),
+            )
+        oh = np.asarray(ref.chunk_histogram(jnp.asarray(x), chunk_elems))
+        np.testing.assert_array_equal(kh, oh)
+
+
+class TestXorElems:
+    @pytest.mark.parametrize("dtype", [np.uint16, np.uint32])
+    def test_vs_numpy(self, dtype):
+        from repro.kernels import xor_delta as xd
+
+        n = xd.XOR_ROWS * 128
+        rng = np.random.default_rng(3)
+        a = rng.integers(0, np.iinfo(dtype).max, n, dtype=np.uint64).astype(dtype)
+        b = rng.integers(0, np.iinfo(dtype).max, n, dtype=np.uint64).astype(dtype)
+        d = xd.xor_elems_2d(
+            jnp.asarray(a).reshape(-1, 128), jnp.asarray(b).reshape(-1, 128),
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(d).reshape(-1), a ^ b)
+
+
+class TestFusedPlaneProducer:
+    def test_matches_host_planes_and_bincount(self):
+        from repro.kernels import fused_plane
+
+        n = fused_plane.ALIGN_ELEMS_U16 * 2
+        chunk_elems = n // 4
+        x = _weights_bf16(n, 11)
+        planes, hists = fused_plane.plane_producer(
+            jnp.asarray(x).reshape(-1, 128),
+            itemsize=2, chunk_elems=chunk_elems, interpret=True,
+        )
+        layout = bitlayout.layout_for("bfloat16")
+        host = bitlayout.to_planes(x.view(np.uint8), layout)
+        for k, h in zip(planes, host):
+            np.testing.assert_array_equal(np.asarray(k).reshape(-1), h)
+        for p, h in enumerate(host):
+            for c in range(4):
+                np.testing.assert_array_equal(
+                    np.asarray(hists)[c, p],
+                    np.bincount(h[c * chunk_elems : (c + 1) * chunk_elems], minlength=256),
+                )
+
+    def test_delta_fusion_commutes_with_host_xor(self):
+        from repro.kernels import fused_plane
+
+        n = fused_plane.ALIGN_ELEMS_U32
+        rng = np.random.default_rng(12)
+        a = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+        b = rng.integers(0, 1 << 32, n, dtype=np.uint64).astype(np.uint32)
+        planes, _ = fused_plane.plane_producer(
+            jnp.asarray(a).reshape(-1, 128), jnp.asarray(b).reshape(-1, 128),
+            itemsize=4, chunk_elems=n, interpret=True,
+        )
+        layout = bitlayout.layout_for("float32")
+        host = bitlayout.to_planes((a ^ b).view(np.uint8), layout)
+        for k, h in zip(planes, host):
+            np.testing.assert_array_equal(np.asarray(k).reshape(-1), h)
