@@ -16,10 +16,13 @@ therefore identical by construction; only throughput changes.
 ``--backend device|both`` additionally runs the ZipNN rows through the
 device plane-producer backend (fused Pallas dispatch, see
 core/device_plane.py) and **asserts byte-parity** against the host blobs —
-the backend knob's contract.  On a CPU-only host the kernels run in
-interpret mode, so device-row throughput is a correctness artifact, not a
-speed claim (flagged in the row).  Results are written to
-``BENCH_table3.json``.
+the backend knob's contract.  The same rows sweep the *decode* side
+through the device plane-consumer backend (core/device_unplane.py):
+decompress throughput is reported for both backends and the decoded bytes
+are asserted bit-identical to the raw input, without touching the host
+rows' compress numbers.  On a CPU-only host the kernels run in interpret
+mode, so device-row throughput is a correctness artifact, not a speed
+claim (flagged in the row).  Results are written to ``BENCH_table3.json``.
 """
 
 from __future__ import annotations
@@ -116,12 +119,20 @@ def run(
                 )
                 # backend contract: device blobs byte-identical to host
                 assert dev_blob == blob_1t, "device blob != host blob"
+                dev_back, t_d = _timed(
+                    lambda: zipnn.decompress_bytes(
+                        dev_blob, threads=nt, backend="device"
+                    ),
+                    reps=reps,
+                )
+                # decode contract: device-decoded bytes bit-identical
+                assert dev_back == raw, "device decode != raw bytes"
                 rows.append(
                     {"model": name,
                      "method": f"ZipNN(device, threads={nt})",
                      "comp_pct": round(100 * len(dev_blob) / nb, 1),
                      "comp_gbps": round(nb / t_c / 1e9, 3),
-                     "decomp_gbps": None,
+                     "decomp_gbps": round(nb / t_d / 1e9, 3),
                      "parity": "byte-identical",
                      "note": (
                          "interpret-mode kernels (no TPU): parity check, "
@@ -139,8 +150,8 @@ def main() -> None:
     )
     ap.add_argument(
         "--backend", choices=["host", "device", "both"], default="host",
-        help="plane-producer backends to sweep; device rows assert "
-             "byte-parity against host blobs",
+        help="plane producer/consumer backends to sweep; device rows assert "
+             "byte-parity of blobs AND bit-exact device decode",
     )
     ap.add_argument(
         "--n", type=int, default=N,

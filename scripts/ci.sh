@@ -1,12 +1,30 @@
 #!/usr/bin/env bash
 # Tier-1 verification (see ROADMAP.md). Extra pytest args pass through:
-#   scripts/ci.sh -m "not slow"
+#   scripts/ci.sh -k engine          # extra filters compose with the split
+#   scripts/ci.sh -m "not slow"      # caller-supplied -m replaces the split
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Fast suite first (fail fast on logic errors), then the slow split: the
+# heavyweight fuzz/property sweeps (dense corruption flips, the full
+# dtype × shape × payload × backend × threads parity sweep) run separately
+# so a quick red signal never waits behind them.  A caller-supplied -m
+# takes over marker selection entirely — pytest's last -m wins, so adding
+# our own would silently override the caller's.
+if [[ " $* " == *" -m"* ]]; then
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+else
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q -m "not slow" "$@"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "slow" "$@"
+fi
+
+# Decode-backend parity smoke: host vs device × threads 1 vs 4 through the
+# shared harness (tests/parity.py), including the golden-blob fixtures.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 
 # Fast host/device backend parity smoke: small corpus through the Table 3
-# sweep; asserts device blobs byte-identical to host blobs (interpret mode
-# on CPU-only hosts) and writes the result JSON.
+# sweep; asserts device blobs byte-identical to host blobs AND device
+# decode bit-identical to the raw bytes (interpret mode on CPU-only hosts)
+# and writes the result JSON.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
     --backend both --n 120000 --json BENCH_table3_smoke.json

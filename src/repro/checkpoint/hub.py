@@ -75,8 +75,9 @@ def simulate_transfer(
     """Measure one hub transfer.  ``threads`` fans the codec's (plane,
     chunk) work items across the engine pool — the hub-scale serving knob
     (codec time scales down with cores, wire time is fixed); ``backend``
-    selects the plane-producer path (host numpy vs fused device dispatch,
-    bytes identical)."""
+    selects both the plane-producer path on upload and the plane-consumer
+    path on download (host numpy vs fused device dispatch, bytes
+    identical)."""
     bw = CHANNELS[channel] * 1e6
     t0 = time.perf_counter()
     blob = zipnn.compress_bytes(
@@ -84,7 +85,7 @@ def simulate_transfer(
     )
     t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
-    back = zipnn.decompress_bytes(blob, config, threads=threads)
+    back = zipnn.decompress_bytes(blob, config, threads=threads, backend=backend)
     t_dec = time.perf_counter() - t0
     assert back == bytes(data), "hub transfer must be lossless"
     codec = t_comp if direction == "upload" else t_dec
@@ -103,6 +104,7 @@ def _overlapped_download(
     config: zipnn.ZipNNConfig,
     threads: Optional[int],
     bw: float,
+    backend: Optional[str] = None,
 ) -> Tuple[float, float]:
     """Pipelined download time over a ``ZNS1`` container.
 
@@ -131,7 +133,7 @@ def _overlapped_download(
         wire_total += wire
         total += wire if prev_dec is None else max(wire, prev_dec)
         t0 = time.perf_counter()
-        zipnn.decompress_bytes(blob, config, threads=threads)
+        zipnn.decompress_bytes(blob, config, threads=threads, backend=backend)
         prev_dec = time.perf_counter() - t0
     if prev_dec is not None:
         total += prev_dec
@@ -175,12 +177,14 @@ def simulate_file_transfer(
         t_comp = time.perf_counter() - t0
         t0 = time.perf_counter()
         with open(os.devnull, "wb") as sink:
-            n = engine.decompress_file(comp_path, sink, config, threads=threads)
+            n = engine.decompress_file(
+                comp_path, sink, config, threads=threads, backend=backend
+            )
         t_dec = time.perf_counter() - t0
         overlap_total = overlap_codec = 0.0
         if direction == "download":
             overlap_total, overlap_codec = _overlapped_download(
-                comp_path, config, threads, bw
+                comp_path, config, threads, bw, backend=backend
             )
     if n != raw_bytes:
         raise AssertionError("streamed hub transfer must be lossless")

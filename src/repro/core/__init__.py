@@ -21,6 +21,7 @@ from .zipnn import (
     compress_pytree,
     decompress_pytree,
     delta_compress,
+    delta_compress_batched,
     delta_decompress,
     ratio,
 )
@@ -34,7 +35,8 @@ __all__ = [
     "get_pool", "resolve_threads",
     "ZipNNConfig", "CompressedTensor", "compress_array", "decompress_array",
     "compress_bytes", "decompress_bytes", "compress_pytree",
-    "decompress_pytree", "delta_compress", "delta_decompress", "ratio",
+    "decompress_pytree", "delta_compress", "delta_compress_batched",
+    "delta_decompress", "ratio",
     "byte_entropy", "exponent_histogram", "plane_report", "classify_model",
     "baselines",
 ]

@@ -34,6 +34,7 @@ __all__ = [
     "BitLayout",
     "LAYOUTS",
     "layout_for",
+    "layout_by_name",
     "to_planes",
     "from_planes",
     "exponent_view",
@@ -96,6 +97,16 @@ def layout_for(dtype_name: str) -> BitLayout:
         return LAYOUTS[dtype_name]
     except KeyError:
         raise ValueError(f"no ZipNN bit layout for dtype {dtype_name!r}") from None
+
+
+def layout_by_name(layout_name: str) -> BitLayout:
+    """Layout for a *layout* name ('bf16', 'fp32', ...) as stored in ZNN1
+    container headers.  Unknown names raise ``ValueError`` — a corrupted
+    header byte must surface as a clean parse error, not a StopIteration."""
+    for layout in LAYOUTS.values():
+        if layout.name == layout_name:
+            return layout
+    raise ValueError(f"unknown ZNN1 layout name {layout_name!r}")
 
 
 # Rotations run segment-at-a-time into a preallocated output: whole-array

@@ -200,7 +200,10 @@ def _zlib(data: bytes, level: int) -> bytes:
 
 
 def _unzlib(data: bytes, raw_len: int) -> bytes:
-    return zlib.decompress(data, -15, raw_len)
+    try:
+        return zlib.decompress(data, -15, raw_len)
+    except zlib.error as e:
+        raise IOError(f"corrupt zlib chunk payload: {e}") from None
 
 
 @dataclasses.dataclass
@@ -470,10 +473,28 @@ class PlaneCodec:
         Each id writes a disjoint slice of ``out`` so work items are safe to
         run concurrently.  HUFF chunks of a batch decode in lockstep
         (chunk-parallel) through one :func:`huffman.decode_many` call.
+
+        Every payload's CRC (recorded in the metadata map at encode time) is
+        verified *before* its bytes reach a decoder, so a flipped payload
+        byte raises a clean ``IOError`` instead of feeding garbage to the
+        entropy stage — the corruption-fuzz contract.  Verification is part
+        of the work item, so it parallelizes with the decode itself.
         """
+        for i in ids:
+            e = entries[i]
+            if e.method == Method.ZERO:
+                if e.comp_len or e.crc:
+                    raise IOError(
+                        "corrupt chunk entry: ZERO chunk with a payload"
+                    )
+            elif zlib.crc32(payloads[i]) != e.crc:
+                raise IOError(f"chunk payload CRC mismatch (chunk {i})")
         huff_idx = [i for i in ids if entries[i].method == Method.HUFF]
         if huff_idx:
-            assert self.table is not None, "HUFF chunks require a table"
+            if self.table is None:
+                raise IOError("corrupt stream: HUFF chunks but no plane table")
+            if any(not payloads[i] and entries[i].raw_len for i in huff_idx):
+                raise IOError("corrupt chunk entry: empty HUFF payload")
             decoded = huffman.decode_many(
                 [payloads[i] for i in huff_idx],
                 [entries[i].raw_len for i in huff_idx],
@@ -490,11 +511,18 @@ class PlaneCodec:
             if e.method == Method.ZERO:
                 dst[:] = 0
             elif e.method == Method.STORE:
+                if e.comp_len != e.raw_len:
+                    raise IOError(
+                        "corrupt chunk entry: STORE length != raw length"
+                    )
                 dst[:] = np.frombuffer(payloads[i], dtype=np.uint8)
             elif e.method in (Method.ZLIB, Method.HUFFLIB):
-                dst[:] = np.frombuffer(
-                    _unzlib(payloads[i], e.raw_len), dtype=np.uint8
-                )
+                blob = _unzlib(payloads[i], e.raw_len)
+                if len(blob) != e.raw_len:
+                    raise IOError(
+                        "corrupt zlib chunk payload: wrong decoded length"
+                    )
+                dst[:] = np.frombuffer(blob, dtype=np.uint8)
             else:
                 raise ValueError(f"unknown method {e.method}")
 

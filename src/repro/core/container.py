@@ -118,23 +118,41 @@ def pack_stream(
 
 
 def unpack_stream(blob: bytes) -> Tuple[StreamMeta, memoryview]:
-    """Parse header + metadata map; payloads stay as a zero-copy memoryview."""
+    """Parse header + metadata map; payloads stay as a zero-copy memoryview.
+
+    Corrupt or truncated input raises ``ValueError`` — every size that
+    drives a parse loop is bounds-checked against the blob before the loop
+    runs, so a flipped header byte can never turn into an unbounded
+    allocation, a hang, or a struct error escaping as something unclean.
+    """
     mv = memoryview(blob)
-    magic, version, flags, layout_b, n_bytes, chunk_bytes, n_planes = _HDR.unpack_from(
-        mv, 0
-    )
+    try:
+        magic, version, flags, layout_b, n_bytes, chunk_bytes, n_planes = (
+            _HDR.unpack_from(mv, 0)
+        )
+    except struct.error:
+        raise ValueError("truncated ZNN1 header") from None
     if magic != _MAGIC:
         raise ValueError("not a ZNN1 stream")
     if version != 1:
         raise ValueError(f"unsupported ZNN version {version}")
+    if chunk_bytes <= 0:
+        raise ValueError("corrupt ZNN1 header: chunk_bytes must be positive")
     off = _HDR.size
-    layout_name = layout_b.rstrip(b"\x00").decode()
+    try:
+        layout_name = layout_b.rstrip(b"\x00").decode()
+    except UnicodeDecodeError:
+        raise ValueError("corrupt ZNN1 header: bad layout name") from None
 
     tables: List[Optional[bytes]] = []
     for _ in range(n_planes):
+        if off >= len(mv):
+            raise ValueError("truncated ZNN1 plane-table section")
         has = mv[off]
         off += 1
         if has:
+            if off + 128 > len(mv):
+                raise ValueError("truncated ZNN1 plane table")
             tables.append(bytes(mv[off : off + 128]))
             off += 128
         else:
@@ -144,6 +162,8 @@ def unpack_stream(blob: bytes) -> Tuple[StreamMeta, memoryview]:
     n_per_plane = n_bytes // n_planes if n_planes else 0
     n_chunks = -(-n_per_plane // chunk_bytes) if n_per_plane else 0
 
+    if off + n_chunks * n_planes * _REC.size > len(mv):
+        raise ValueError("truncated ZNN1 metadata map")
     entries: List[List[ChunkEntry]] = [[] for _ in range(n_planes)]
     for c in range(n_chunks):
         for p in range(n_planes):

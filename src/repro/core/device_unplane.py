@@ -1,0 +1,242 @@
+"""Device plane-consumer backend for the decompression engine.
+
+Mirror of :mod:`.device_plane`.  The host decompression path rebuilds each
+byte-group plane from the entropy stage, then runs two more host passes —
+the per-plane byte scatter + inverse rotate (:func:`repro.core.bitlayout.
+from_planes`) and, for §4.2 delta streams, the XOR against the base tensor.
+For device-bound restores that means the planed uint8 buffers are
+materialized, scattered and rotated on the host before the result is
+uploaded anyway.
+
+This module instead uploads the entropy-decoded planes **once** and runs
+un-byte-group, inverse rotate and inverse XOR-delta in one fused Pallas
+dispatch (:func:`repro.kernels.fused_unplane.plane_consumer`), followed by
+a single device→host transfer of the reconstructed bytes.  Decoded bytes
+are **bit-identical** to the host path for every thread count — the
+backend knob changes wall-clock only.
+
+Backend selection (the ``backend`` knob on every decompression entry
+point, defaulting to :class:`repro.core.zipnn.ZipNNConfig` ``plane_backend``):
+
+* ``"host"``   — always the numpy path (default).
+* ``"device"`` — the fused Pallas path whenever the layout is supported;
+  silent host fallback otherwise, so the knob is always safe to set.
+* ``"auto"``   — device only when it can pay for the plane upload: a
+  non-CPU accelerator is attached, or the delta base is already
+  accelerator-resident.  (Encode-side ``auto`` keys off the *leaf*
+  residence; decode planes always start host-side after the entropy
+  stage, so residence of the hardware/base is the signal here.)
+
+Support envelope: 2- and 4-byte rotated layouts (bf16 / fp16 / fp32).  The
+decode side has no histogram stage, so — unlike the producer — there is no
+chunk-size constraint.  Everything else falls back to the host path.
+
+Batched multi-leaf dispatch: :func:`consume_planes_batched` concatenates
+many same-layout leaves' planes into one padded ``(M, 128)`` grid per
+plane index, launches once, and slices per-leaf bytes out of the single
+transferred element buffer — per-leaf kernel-launch latency never
+dominates real model trees.  Decode needs no chunk alignment between
+leaves, only the total row-block pad; zero pad bytes reconstruct to zero
+elements and are sliced off.
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import numpy as np
+
+from . import bitlayout
+from .device_plane import (
+    MAX_BATCH_BYTES,
+    _dev_elems,
+    _on_accelerator,
+    is_available,
+)
+
+__all__ = [
+    "BACKENDS",
+    "is_available",
+    "supports",
+    "resolve",
+    "consume_planes",
+    "consume_planes_batched",
+]
+
+BACKENDS = ("host", "device", "auto")
+
+
+def supports(layout: bitlayout.BitLayout) -> bool:
+    """Can the fused device path reconstruct bit-identical bytes?
+
+    Requires a rotated 2- or 4-byte layout (the un-group kernels always
+    inverse-rotate); no chunk constraint — decode has no histogram stage.
+    """
+    if not layout.rotate or layout.itemsize not in (2, 4):
+        return False
+    return is_available()
+
+
+def _accelerator_attached() -> bool:
+    if not is_available():
+        return False
+    import jax
+
+    try:
+        return jax.default_backend() != "cpu"
+    except Exception:  # pragma: no cover - defensive
+        return False
+
+
+def resolve(
+    requested: Optional[str],
+    layout: bitlayout.BitLayout,
+    base: Any = None,
+) -> str:
+    """Collapse a decode-backend request to the concrete path."""
+    if requested is None or requested == "host":
+        return "host"
+    if requested == "device":
+        return "device" if supports(layout) else "host"
+    if requested == "auto":
+        return (
+            "device"
+            if supports(layout)
+            and (_accelerator_attached() or _on_accelerator(base))
+            else "host"
+        )
+    raise ValueError(
+        f"unknown plane backend {requested!r}; expected one of {BACKENDS}"
+    )
+
+
+def consume_planes(
+    planes: Sequence[np.ndarray],
+    layout: bitlayout.BitLayout,
+    base: Any = None,
+) -> np.ndarray:
+    """Single-leaf convenience wrapper around :func:`consume_planes_batched`.
+
+    ``base`` enables the fused §4.2 inverse XOR-delta path (the
+    reconstructed delta is XORed with ``base`` on device, so the delta
+    stream never materializes host-side).  Returns the flat uint8 byte
+    view — the exact inverse of :func:`repro.core.bitlayout.to_planes`.
+    """
+    return consume_planes_batched(
+        [planes], layout, bases=None if base is None else [base]
+    )[0]
+
+
+def consume_planes_batched(
+    planes_list: Sequence[Sequence[np.ndarray]],
+    layout: bitlayout.BitLayout,
+    bases: Optional[Sequence[Any]] = None,
+) -> List[np.ndarray]:
+    """Pack many leaves' planes into one fused dispatch; return per-leaf bytes.
+
+    All leaves must share ``layout``.  Each plane index is concatenated
+    across leaves, the total is zero-padded to the kernel's row-block
+    alignment, and a single ``plane_consumer`` launch + a single
+    ``jax.device_get`` reconstruct every leaf's raw bytes.  Oversized
+    batches split at :data:`~repro.core.device_plane.MAX_BATCH_BYTES`.
+    """
+    if bases is not None and len(bases) != len(planes_list):
+        raise ValueError("bases must pair 1:1 with planes_list")
+    if not planes_list:
+        return []
+    if not supports(layout):
+        raise ValueError(
+            f"device plane-consumer backend does not support layout "
+            f"{layout.name!r}"
+        )
+    for planes in planes_list:
+        if len(planes) != layout.n_planes:
+            raise ValueError(
+                f"expected {layout.n_planes} planes, got {len(planes)}"
+            )
+    sizes = [int(planes[0].size) for planes in planes_list]
+    # Split oversized batches up front; recursion depth is 1.
+    if len(planes_list) > 1 and sum(sizes) * layout.itemsize > MAX_BATCH_BYTES:
+        out: List[np.ndarray] = []
+        start, acc = 0, 0
+        for i, s in enumerate(sizes):
+            nb = s * layout.itemsize
+            if acc and acc + nb > MAX_BATCH_BYTES:
+                out.extend(
+                    consume_planes_batched(
+                        planes_list[start:i], layout,
+                        None if bases is None else bases[start:i],
+                    )
+                )
+                start, acc = i, 0
+            acc += nb
+        out.extend(
+            consume_planes_batched(
+                planes_list[start:], layout,
+                None if bases is None else bases[start:],
+            )
+        )
+        return out
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import fused_unplane
+
+    total = sum(sizes)
+    if total == 0:                               # every leaf empty: no dispatch
+        return [np.empty(0, np.uint8) for _ in sizes]
+    align = (
+        fused_unplane.ALIGN_ELEMS_U16
+        if layout.itemsize == 2
+        else fused_unplane.ALIGN_ELEMS_U32
+    )
+    tail = -total % align
+
+    # One upload per plane index: the concatenation of every leaf's plane.
+    dev_planes = []
+    for p in range(layout.n_planes):
+        parts = [np.ascontiguousarray(planes[p]) for planes in planes_list]
+        if tail:
+            parts.append(np.zeros(tail, np.uint8))
+        cat = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        dev_planes.append(
+            jnp.asarray(cat).reshape(-1, fused_unplane.LANES)
+        )
+
+    base2 = None
+    if bases is not None and any(b is not None for b in bases):
+        bparts = []
+        for b, s in zip(bases, sizes):
+            if s == 0:
+                continue
+            e = (
+                jnp.zeros((s,), dtype=jnp.dtype(layout.uint_dtype))
+                if b is None                    # XOR identity
+                else _dev_elems(b, layout)
+            )
+            if e.shape[0] != s:
+                raise ValueError("delta base must match the leaf's element count")
+            bparts.append(e)
+        if tail:
+            bparts.append(
+                jnp.zeros((tail,), dtype=jnp.dtype(layout.uint_dtype))
+            )
+        base2 = jnp.concatenate(bparts).reshape(-1, fused_unplane.LANES)
+
+    x2 = fused_unplane.plane_consumer(
+        tuple(dev_planes), base2, itemsize=layout.itemsize,
+        interpret=jax.default_backend() != "tpu",
+    )
+    # The one device→host transfer: reconstructed elements for the batch.
+    elems = np.asarray(jax.device_get(x2)).reshape(-1)
+
+    out = []
+    off = 0
+    for s in sizes:
+        if s == 0:
+            out.append(np.empty(0, np.uint8))
+            continue
+        out.append(np.ascontiguousarray(elems[off : off + s]).view(np.uint8))
+        off += s
+    return out

@@ -58,6 +58,14 @@ byte-group + probe) has two interchangeable backends, chosen by the
   combinations silently fall back to the host path;
 * ``"auto"`` — device only for accelerator-resident ``jax.Array`` leaves.
 
+The same knob covers the decode work items: :class:`DecompressReader` /
+:func:`decompress_file` pass ``backend=`` through to
+``zipnn.decompress_bytes``, whose back half (un-byte-group + inverse
+rotate) runs either as pooled numpy scatters or as one fused Pallas
+dispatch per frame (:mod:`repro.core.device_unplane`), composing with the
+reader's frame prefetch: frame k's planes can be consuming on device while
+frame k+1's bytes are read and CRC-checked.
+
 Blobs are byte-identical for every backend × thread-count combination —
 both knobs change wall-clock only, never bytes.
 """
@@ -317,6 +325,10 @@ class DecompressReader:
     dedicated pipeline thread (chunk work items on the engine pool) while
     frame k+1's bytes are read and CRC-checked from the file — IO and codec
     overlap, one frame in flight, decoded stream unchanged.
+
+    ``backend`` selects the decode back half per frame ('host' | 'device'
+    | 'auto' — see ``core/device_unplane.py``); decoded bytes are
+    identical for every setting.
     """
 
     def __init__(
@@ -325,11 +337,13 @@ class DecompressReader:
         config=None,
         *,
         threads: Optional[int] = None,
+        backend: Optional[str] = None,
     ):
         from . import zipnn
 
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if threads is None else threads
+        self._backend = backend
         self._fp, self._own = _open(fp, "rb")
         hdr = self._fp.read(_SHDR.size)
         if len(hdr) < _SHDR.size:
@@ -348,7 +362,9 @@ class DecompressReader:
     def _decode(self, blob: bytes) -> bytes:
         from . import zipnn
 
-        return zipnn.decompress_bytes(blob, self._config, threads=self._threads)
+        return zipnn.decompress_bytes(
+            blob, self._config, threads=self._threads, backend=self._backend
+        )
 
     def _frame_iter(self) -> Iterator[bytes]:
         """Single shared generator over the file's frames (created once —
@@ -383,6 +399,8 @@ class DecompressReader:
                 if len(rec) < _FRAME.size:
                     raise IOError("truncated ZNS1 stream (missing end frame)")
                 kind, raw_len, comp_len, crc = _FRAME.unpack(rec)
+                if kind not in (_KIND_DATA, _KIND_END):
+                    raise IOError(f"corrupt ZNS1 frame kind {kind}")
                 if kind == _KIND_END:
                     last = resolve(pending) if pending is not None else None
                     pending = None
@@ -469,6 +487,8 @@ def frame_records(src: PathOrFile) -> Iterator[Tuple[int, int, bytes]]:
             if len(rec) < _FRAME.size:
                 raise IOError("truncated ZNS1 stream (missing end frame)")
             kind, raw_len, comp_len, _crc = _FRAME.unpack(rec)
+            if kind not in (_KIND_DATA, _KIND_END):
+                raise IOError(f"corrupt ZNS1 frame kind {kind}")
             if kind == _KIND_END:
                 return
             blob = fin.read(comp_len)
@@ -520,11 +540,12 @@ def decompress_file(
     config=None,
     *,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> int:
     """Stream-decompress a ``ZNS1`` container; returns raw bytes written."""
     fout, own_out = _open(dst, "wb")
     try:
-        with DecompressReader(src, config, threads=threads) as r:
+        with DecompressReader(src, config, threads=threads, backend=backend) as r:
             total = 0
             for raw in r.frames():
                 fout.write(raw)

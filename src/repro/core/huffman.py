@@ -261,6 +261,8 @@ def decode_many(
     if n_chunks == 0:
         return []
     sizes = np.asarray([len(p) for p in payloads], dtype=np.int64)
+    if np.any((counts > 0) & (sizes == 0)):
+        raise ValueError("corrupt Huffman payload: empty payload for a non-empty chunk")
     starts = np.concatenate([[0], np.cumsum(sizes)])[:-1]
     buf = np.frombuffer(b"".join(payloads) + b"\x00\x00\x00", dtype=np.uint8)
     # Precompute a 24-bit sliding window at every byte offset (3 vector
@@ -279,11 +281,27 @@ def decode_many(
     # always strictly below it, so the clamp never perturbs real decoding.
     total_bits = (buf.size - 3) * 8
     full = int(counts.min(initial=0))
+    final = (starts * 8).astype(np.int64)         # cursor at each chunk's end
     for i in range(max_count):
         window = (buf24[bitpos >> 3] >> (shift_base - (bitpos & 7).astype(np.uint32))) & mask
         v = lut16[window]
         out[:, i] = (v >> 8).astype(np.uint8)
         bitpos += v & 0xFF
+        done = counts == i + 1
+        if done.any():
+            final[done] = bitpos[done]
         if i >= full:                             # only finished cursors move
             np.minimum(bitpos, total_bits, out=bitpos)
+    # Integrity: a valid chunk's cursor stops inside its own final byte (the
+    # encoder byte-aligns every chunk, so 0-7 pad bits of slack).  Corrupt
+    # payloads, wrong tables, or a tampered symbol count either stall the
+    # cursor (invalid prefix: length 0) or run it past the chunk — both land
+    # outside [0, 8) slack and are rejected instead of yielding wrong bytes.
+    used = final - starts * 8
+    slack = sizes * 8 - used
+    if np.any((slack < 0) | ((slack >= 8) & (counts > 0))):
+        raise ValueError(
+            "corrupt Huffman payload: bit cursor did not land on the "
+            "chunk's final byte"
+        )
     return [out[c, : int(counts[c])].copy() for c in range(n_chunks)]

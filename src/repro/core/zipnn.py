@@ -28,6 +28,14 @@ Pallas dispatch with a single device→host transfer of planed buffers +
 probe stats (see :mod:`.device_plane`), ``"auto"`` picks device only for
 accelerator-resident leaves.  Blobs are byte-identical across backends ×
 thread counts — both knobs change wall-clock only.
+
+Every *decompression* entry point takes the same ``backend=`` knob for the
+decode back half (see :mod:`.device_unplane`): after the entropy stage
+rebuilds the byte-group planes, ``"device"`` uploads them once and runs
+un-byte-group + inverse rotate + inverse XOR-delta as one fused Pallas
+dispatch; ``"auto"`` picks device only when an accelerator is attached (or
+the delta base already lives on one).  Decoded bytes are bit-identical
+across backends × thread counts — asserted by ``tests/parity.py``.
 """
 
 from __future__ import annotations
@@ -55,6 +63,7 @@ __all__ = [
     "compress_pytree",
     "decompress_pytree",
     "delta_compress",
+    "delta_compress_batched",
     "delta_decompress",
     "compress_file",
     "decompress_file",
@@ -195,13 +204,31 @@ def compress_bytes(
     )
 
 
-def decompress_bytes(
-    blob: bytes, config: ZipNNConfig = DEFAULT, *, threads: Optional[int] = None
-) -> bytes:
+def _resolve_decode_backend(
+    backend: Optional[str],
+    config: ZipNNConfig,
+    layout: bitlayout.BitLayout,
+    base: Any = None,
+) -> str:
+    """Collapse the decode-backend knob to 'host' or 'device'."""
+    requested = config.plane_backend if backend is None else backend
+    if requested == "host":
+        return "host"
+    from . import device_unplane  # lazy: pulls in jax/Pallas
+
+    return device_unplane.resolve(requested, layout, base=base)
+
+
+def _entropy_decode(
+    blob: bytes, config: ZipNNConfig, pool
+) -> Tuple[bitlayout.BitLayout, List[np.ndarray], bytes]:
+    """Shared front half of every decompression path: parse the container
+    and entropy-decode every (plane, chunk) payload (CRC-verified work
+    items fanned across ``pool``).  Returns ``(layout, planes, tail)`` —
+    the byte-group planes still await un-grouping by either backend."""
     meta, mv = container.unpack_stream(blob)
-    layout = next(l for l in bitlayout.LAYOUTS.values() if l.name == meta.layout_name)
+    layout = bitlayout.layout_by_name(meta.layout_name)
     params = codec.CodecParams(chunk_bytes=meta.chunk_bytes, backend=config.backend)
-    pool = engine.get_pool(config.threads if threads is None else threads)
     planes = []
     for p in range(meta.n_planes):
         payload_list = [
@@ -213,15 +240,35 @@ def decompress_bytes(
                 meta.entries[p], payload_list, meta.tables[p], params, pool=pool
             )
         )
-    body = bitlayout.from_planes(tuple(planes), layout, pool=pool)
     # trailing unaligned bytes
     end = meta.payload_base + sum(
         e.comp_len for pe in meta.entries for e in pe
     )
     tail = blob[end:]
-    if tail[:4] == b"TAIL":
-        return body.tobytes() + tail[4:]
-    return body.tobytes()
+    return layout, planes, (tail[4:] if tail[:4] == b"TAIL" else b"")
+
+
+def decompress_bytes(
+    blob: bytes,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> bytes:
+    """Decompress one ZNN1 blob back to its raw little-endian byte stream."""
+    pool = engine.get_pool(config.threads if threads is None else threads)
+    layout, planes, tail = _entropy_decode(blob, config, pool)
+    if (
+        planes
+        and planes[0].size
+        and _resolve_decode_backend(backend, config, layout) == "device"
+    ):
+        from . import device_unplane
+
+        body = device_unplane.consume_planes(planes, layout)
+    else:
+        body = bitlayout.from_planes(tuple(planes), layout, pool=pool)
+    return body.tobytes() + tail
 
 
 # ---------------------------------------------------------------------------
@@ -282,17 +329,21 @@ def compress_array(
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
 
+def _np_dtype(name: str) -> np.dtype:
+    import ml_dtypes  # registered with numpy by jax
+
+    return np.dtype(getattr(ml_dtypes, name, name))
+
+
 def decompress_array(
     ct: CompressedTensor,
     config: ZipNNConfig = DEFAULT,
     *,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> np.ndarray:
-    raw = decompress_bytes(ct.blob, config, threads=threads)
-    import ml_dtypes  # registered with numpy by jax
-
-    dtype = np.dtype(getattr(ml_dtypes, ct.dtype, ct.dtype))
-    return np.frombuffer(raw, dtype=dtype).reshape(ct.shape).copy()
+    raw = decompress_bytes(ct.blob, config, threads=threads, backend=backend)
+    return np.frombuffer(raw, dtype=_np_dtype(ct.dtype)).reshape(ct.shape).copy()
 
 
 def compress_pytree(
@@ -360,11 +411,78 @@ def decompress_pytree(
     config: ZipNNConfig = DEFAULT,
     *,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> Any:
+    """Decompress every leaf of a :func:`compress_pytree` manifest.
+
+    With the device backend, same-layout leaves are decoded through
+    **batched multi-leaf dispatches** (see :mod:`.device_unplane`): each
+    leaf's planes are entropy-decoded host-side (chunk work items on the
+    engine pool), then one upload + one fused kernel launch + one transfer
+    reconstruct the whole group.  Decoded arrays are bit-identical to
+    decompressing each leaf alone on either backend.
+    """
     import jax
 
-    leaves = [decompress_array(c, config, threads=threads) for c in manifest["leaves"]]
-    return jax.tree_util.tree_unflatten(manifest["treedef"], leaves)
+    cts: List[CompressedTensor] = manifest["leaves"]
+    arrays: List[Optional[np.ndarray]] = [None] * len(cts)
+
+    requested = config.plane_backend if backend is None else backend
+    if requested != "host" and cts:
+        from . import device_plane, device_unplane
+
+        pool = engine.get_pool(config.threads if threads is None else threads)
+        groups: Dict[str, List[int]] = {}
+        for i, ct in enumerate(cts):
+            layout = bitlayout.LAYOUTS.get(ct.dtype)
+            if (
+                layout is not None
+                and device_unplane.resolve(requested, layout) == "device"
+            ):
+                groups.setdefault(layout.name, []).append(i)
+        # Entropy-decode and dispatch one MAX_BATCH_BYTES window at a time:
+        # peak host memory is one window of planes + the output arrays, not
+        # every leaf's planes at once — the O(window) story of the file API
+        # applied to tree restores.
+        for name, idxs in groups.items():
+            layout = bitlayout.layout_by_name(name)
+            win_idx: List[int] = []
+            win_planes: List[List[np.ndarray]] = []
+            acc = 0
+
+            def flush():
+                raws = device_unplane.consume_planes_batched(win_planes, layout)
+                for i, raw in zip(win_idx, raws):
+                    arrays[i] = (
+                        np.frombuffer(raw.tobytes(), dtype=_np_dtype(cts[i].dtype))
+                        .reshape(cts[i].shape)
+                        .copy()
+                    )
+                win_idx.clear()
+                win_planes.clear()
+
+            for i in idxs:
+                blob_layout, planes, tail = _entropy_decode(cts[i].blob, config, pool)
+                if (
+                    tail
+                    or blob_layout.name != layout.name
+                    or not planes
+                    or not planes[0].size
+                ):
+                    continue                   # edge cases ride the host path
+                win_idx.append(i)
+                win_planes.append(planes)
+                acc += planes[0].size * layout.itemsize
+                if acc >= device_plane.MAX_BATCH_BYTES:
+                    flush()
+                    acc = 0
+            if win_idx:
+                flush()
+
+    for i, ct in enumerate(cts):
+        if arrays[i] is None:
+            arrays[i] = decompress_array(ct, config, threads=threads, backend="host")
+    return jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
 
 
 # ---------------------------------------------------------------------------
@@ -421,20 +539,111 @@ def delta_compress(
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
 
+def delta_compress_batched(
+    news: Sequence[Any],
+    bases: Sequence[Any],
+    config: ZipNNConfig = DEFAULT,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> List[CompressedTensor]:
+    """Delta-compress many ``(new, base)`` pairs; returns blobs in order.
+
+    With the device backend, same-dtype pairs are packed into **batched
+    multi-leaf dispatches** through
+    :func:`repro.core.device_plane.produce_planes_batched` (``bases=``):
+    one fused XOR→rotate+byte-group→probe launch + one transfer covers many
+    small tensors — the checkpoint manager's delta-save path.  Blobs per
+    pair are identical to calling :func:`delta_compress` one pair at a time
+    on either backend.
+    """
+    if len(news) != len(bases):
+        raise ValueError("news and bases must pair 1:1")
+    out: List[Optional[CompressedTensor]] = [None] * len(news)
+
+    requested = config.plane_backend if backend is None else backend
+    if requested != "host" and news:
+        from . import device_plane
+
+        groups: Dict[str, List[int]] = {}
+        for i, (a, b) in enumerate(zip(news, bases)):
+            layout = _leaf_layout(a)
+            if layout is None or not np.size(a):
+                continue
+            if np.shape(a) != np.shape(b) or getattr(a, "dtype", None) != getattr(
+                b, "dtype", None
+            ):
+                continue                       # host path raises the clean error
+            params = config.plane_params(layout.itemsize, delta=True)
+            if device_plane.resolve(requested, layout, params, leaf=a) == "device":
+                groups.setdefault(a.dtype.name, []).append(i)
+        pool = engine.get_pool(config.threads if threads is None else threads)
+        for name, idxs in groups.items():
+            layout = bitlayout.LAYOUTS[name]
+            params = config.plane_params(layout.itemsize, delta=True)
+            produced = device_plane.produce_planes_batched(
+                [news[i] for i in idxs], layout, params,
+                bases=[bases[i] for i in idxs],
+            )
+            for i, (planes, probes) in zip(idxs, produced):
+                n_bytes = int(np.size(news[i])) * layout.itemsize
+                blob = _entropy_stage(
+                    planes, probes, layout, n_bytes, None, params, pool, True
+                )
+                out[i] = CompressedTensor(blob, name, tuple(np.shape(news[i])))
+
+    for i, (a, b) in enumerate(zip(news, bases)):
+        if out[i] is None:
+            out[i] = delta_compress(a, b, config, threads=threads, backend="host")
+    return out
+
+
 def delta_decompress(
     ct: CompressedTensor,
     base: Any,
     config: ZipNNConfig = DEFAULT,
     *,
     threads: Optional[int] = None,
+    backend: Optional[str] = None,
 ) -> np.ndarray:
-    b = _to_numpy(base)
-    x = np.frombuffer(decompress_bytes(ct.blob, config, threads=threads), dtype=np.uint8)
-    raw = np.bitwise_xor(x, b.reshape(-1).view(np.uint8))
-    import ml_dtypes
+    """Invert :func:`delta_compress`: decode the delta stream and XOR it
+    with ``base``.
 
-    dtype = np.dtype(getattr(ml_dtypes, ct.dtype, ct.dtype))
-    return np.frombuffer(raw.tobytes(), dtype=dtype).reshape(ct.shape).copy()
+    On the device backend the inverse XOR is fused into the plane-consumer
+    dispatch (see :mod:`.device_unplane`): the decoded planes upload once,
+    un-group + inverse-rotate + XOR run on device against the base at its
+    device residence, and only the reconstructed tensor bytes come back —
+    the delta stream never materializes host-side.
+    """
+    layout = bitlayout.LAYOUTS.get(getattr(getattr(base, "dtype", None), "name", ""))
+    if (
+        layout is not None
+        and np.size(base)
+        and _resolve_decode_backend(backend, config, layout, base=base) == "device"
+    ):
+        pool = engine.get_pool(config.threads if threads is None else threads)
+        blob_layout, planes, tail = _entropy_decode(ct.blob, config, pool)
+        if (
+            not tail
+            and blob_layout.name == layout.name
+            and planes
+            and planes[0].size
+        ):
+            from . import device_unplane
+
+            raw = device_unplane.consume_planes(planes, layout, base=base)
+            return (
+                np.frombuffer(raw.tobytes(), dtype=_np_dtype(ct.dtype))
+                .reshape(ct.shape)
+                .copy()
+            )
+    b = _to_numpy(base)
+    x = np.frombuffer(
+        decompress_bytes(ct.blob, config, threads=threads, backend="host"),
+        dtype=np.uint8,
+    )
+    raw = np.bitwise_xor(x, b.reshape(-1).view(np.uint8))
+    return np.frombuffer(raw.tobytes(), dtype=_np_dtype(ct.dtype)).reshape(ct.shape).copy()
 
 
 # ---------------------------------------------------------------------------

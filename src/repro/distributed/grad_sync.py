@@ -75,7 +75,13 @@ class GradSync:
         return manifest, WireStats(manifest["raw_bytes"], manifest["comp_bytes"], dt)
 
     def unpack(self, manifest: Dict[str, Any]) -> PyTree:
-        return zipnn.decompress_pytree(manifest, self.config, threads=self.threads)
+        # The receive side uses the same backend knob: with 'device'/'auto'
+        # the decoded planes upload once and un-group + inverse rotate run
+        # as fused dispatches (core/device_unplane.py), batched across
+        # same-layout leaves — bytes identical to the host path.
+        return zipnn.decompress_pytree(
+            manifest, self.config, threads=self.threads, backend=self.backend
+        )
 
     def exchange(
         self, grads: PyTree, n_peers: int, link_gbps: float = 1.0

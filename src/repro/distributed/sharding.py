@@ -205,6 +205,29 @@ def param_pspecs(params: Any, *, zero3: bool = False, mesh=None) -> Any:
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+def device_put_tree(tree: Any, mesh, specs: Any) -> Any:
+    """device_put every leaf of ``tree`` onto ``mesh`` per its PartitionSpec.
+
+    ``specs`` is a prefix-pytree of PartitionSpecs (None = leave the leaf
+    where it is).  This is the shard-restore back half shared by
+    ``checkpoint.manager.CheckpointManager.shard_restore`` and any elastic
+    rescale path: the saved layout never constrains the restored one.
+    """
+    from jax.sharding import NamedSharding
+
+    leaves_t, treedef_t = jax.tree_util.tree_flatten(tree)
+    leaves_s = (
+        treedef_t.flatten_up_to(specs)
+        if specs is not None
+        else [None] * len(leaves_t)
+    )
+    out = [
+        jax.device_put(l, NamedSharding(mesh, sp)) if sp is not None else l
+        for l, sp in zip(leaves_t, leaves_s)
+    ]
+    return jax.tree_util.tree_unflatten(treedef_t, out)
+
+
 def batch_pspec(mesh=None) -> P:
     mesh_axes = tuple(mesh.axis_names) if mesh is not None else (
         _current_mesh_axes() or ()

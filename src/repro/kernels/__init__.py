@@ -9,12 +9,16 @@ Kernels (each: <name>.py kernel + ref.py oracle + ops.py wrapper):
   * fused_plane — one-dispatch composition of xor_delta + bytegroup +
                   per-chunk histogram: the engine's device plane-producer
                   backend (see ``core.device_plane``)
+  * fused_unplane — the decode mirror: un-byte-group + inverse rotate +
+                  inverse XOR-delta in one kernel per dispatch: the
+                  engine's device plane-consumer backend (see
+                  ``core.device_unplane``)
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU in interpret mode against the pure-jnp oracles.
 """
 
-from . import fused_plane, ops, ref
+from . import fused_plane, fused_unplane, ops, ref
 from .ops import (
     bytegroup_bf16,
     ungroup_bf16,
@@ -26,7 +30,7 @@ from .ops import (
 )
 
 __all__ = [
-    "ops", "ref", "fused_plane", "bytegroup_bf16", "ungroup_bf16",
+    "ops", "ref", "fused_plane", "fused_unplane", "bytegroup_bf16", "ungroup_bf16",
     "bytegroup_fp32", "ungroup_fp32", "byte_histogram", "xor_delta_u32",
     "huffman_encode_chunks",
 ]

@@ -1,0 +1,123 @@
+"""Regenerate the golden ZipNN fixtures (format-stability guard).
+
+The checked-in blobs under this directory freeze today's container format
+and codec byte stream.  ``tests/test_golden.py`` (via ``tests/parity.py``)
+asserts that the current code still decodes them bit-exactly on every
+backend × thread combination AND re-encodes the frozen raw bytes to the
+byte-identical blob.  A failing golden test means the on-disk format
+changed — bump the container version and regenerate deliberately:
+
+    PYTHONPATH=src python tests/fixtures/generate_fixtures.py
+
+Inputs are seeded ``np.random.default_rng`` draws (stream-stable per
+NEP 19), but the raw bytes are checked in alongside the blobs so the guard
+never depends on RNG stability.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import sys
+
+import ml_dtypes
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), ".."))
+
+from parity import as_bytes  # noqa: E402
+from repro.core import engine, zipnn  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _weights(n, npdt, seed, scale):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(npdt)
+
+
+def main() -> None:
+    fixtures = []
+
+    def write(name: str, data: bytes) -> str:
+        with open(os.path.join(HERE, name), "wb") as f:
+            f.write(data)
+        return name
+
+    # 1. bf16 through the default hufflib coder (HUFFLIB + STORE chunks)
+    cfg_bf16 = {"chunk_param_bytes": 1 << 15, "backend": "hufflib"}
+    raw = as_bytes(_weights(12_288, ml_dtypes.bfloat16, seed=1, scale=0.02))
+    blob = zipnn.compress_bytes(raw, "bfloat16", zipnn.ZipNNConfig(**cfg_bf16))
+    fixtures.append({
+        "name": "bf16_hufflib", "kind": "bytes", "dtype": "bfloat16",
+        "config": cfg_bf16,
+        "raw": write("bf16_hufflib.raw", raw),
+        "blob": write("bf16_hufflib.znn", blob),
+    })
+
+    # 2. fp32 through our from-scratch canonical coder (HUFF chunks + table)
+    cfg_fp32 = {"chunk_param_bytes": 1 << 16, "backend": "huffman"}
+    raw = as_bytes(_weights(8_192, np.float32, seed=2, scale=0.3))
+    blob = zipnn.compress_bytes(raw, "float32", zipnn.ZipNNConfig(**cfg_fp32))
+    fixtures.append({
+        "name": "fp32_huffman", "kind": "bytes", "dtype": "float32",
+        "config": cfg_fp32,
+        "raw": write("fp32_huffman.raw", raw),
+        "blob": write("fp32_huffman.znn", blob),
+    })
+
+    # 3. fp16 (5-bit exponent layout) with an unaligned TAIL byte
+    cfg_fp16 = {"chunk_param_bytes": 1 << 15, "backend": "huffman"}
+    raw = as_bytes(_weights(12_288, np.float16, seed=3, scale=0.02)) + b"\x2a"
+    blob = zipnn.compress_bytes(raw, "float16", zipnn.ZipNNConfig(**cfg_fp16))
+    fixtures.append({
+        "name": "fp16_tail", "kind": "bytes", "dtype": "float16",
+        "config": cfg_fp16,
+        "raw": write("fp16_tail.raw", raw),
+        "blob": write("fp16_tail.znn", blob),
+    })
+
+    # 4. §4.2 XOR delta of a ~2%-changed bf16 tensor (ZERO/ZLIB chunks)
+    cfg_delta = {"chunk_param_bytes": 1 << 15, "backend": "hufflib"}
+    base = _weights(12_288, ml_dtypes.bfloat16, seed=4, scale=0.02)
+    new = np.asarray(base).copy()
+    rng = np.random.default_rng(5)
+    idx = rng.integers(0, new.size, new.size // 50)
+    new[idx] = (np.asarray(new[idx], np.float32) * 1.01).astype(ml_dtypes.bfloat16)
+    ct = zipnn.delta_compress(new, base, zipnn.ZipNNConfig(**cfg_delta))
+    fixtures.append({
+        "name": "bf16_delta", "kind": "delta", "dtype": "bfloat16",
+        "config": cfg_delta, "shape": list(ct.shape),
+        "raw": write("bf16_delta.raw", as_bytes(new)),
+        "base": write("bf16_delta.base", as_bytes(np.asarray(base))),
+        "blob": write("bf16_delta.znn", ct.blob),
+    })
+
+    # 5. a multi-frame ZNS1 streaming container
+    cfg_stream = {"chunk_param_bytes": 1 << 14, "backend": "hufflib"}
+    window = 1 << 14
+    raw = as_bytes(_weights(32_768, ml_dtypes.bfloat16, seed=6, scale=0.02))
+    sink = io.BytesIO()
+    with engine.CompressWriter(
+        sink, "bfloat16", zipnn.ZipNNConfig(**cfg_stream), window_bytes=window
+    ) as w:
+        w.write(raw)
+    fixtures.append({
+        "name": "bf16_stream", "kind": "stream", "dtype": "bfloat16",
+        "config": cfg_stream, "window_bytes": window,
+        "raw": write("bf16_stream.raw", raw),
+        "blob": write("bf16_stream.znns", sink.getvalue()),
+    })
+
+    with open(os.path.join(HERE, "meta.json"), "w") as f:
+        json.dump({"format": "ZNN1/ZNS1 v1", "fixtures": fixtures}, f, indent=2)
+    total = sum(
+        os.path.getsize(os.path.join(HERE, fx[k]))
+        for fx in fixtures for k in ("raw", "blob", "base") if k in fx
+    )
+    print(f"wrote {len(fixtures)} fixtures ({total / 1024:.0f} KiB) to {HERE}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,330 @@
+"""Shared decode-parity harness (ISSUE 3).
+
+One implementation of the decode contract used by every decode test and
+the CI smoke: for any blob, the decoded bytes are **bit-exact** across
+``backend ∈ {host, device, auto} × threads ∈ {1, 4}``, equal to the host
+reference, and (for the checked-in fixtures) equal to the frozen golden
+raw bytes — while re-encoding the raw bytes reproduces the golden blob
+byte-for-byte (format stability).
+
+Importable from test modules (no ``test_`` prefix, so pytest does not
+collect it as a suite) and runnable standalone as the CI parity smoke:
+
+    PYTHONPATH=src python tests/parity.py --smoke      # reduced sweep
+    PYTHONPATH=src python tests/parity.py              # full sweep + golden
+"""
+
+from __future__ import annotations
+
+import argparse
+import io
+import json
+import os
+import sys
+from typing import Optional, Sequence, Tuple
+
+import ml_dtypes
+import numpy as np
+
+from repro.core import engine, zipnn
+
+FIXTURE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "fixtures")
+
+DTYPES = ("bfloat16", "float32", "float16")
+BACKENDS = ("host", "device", "auto")
+THREADS = (1, 4)
+
+NP_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float16": np.float16,
+    "float32": np.float32,
+    "float64": np.float64,
+}
+
+#: payload kinds the sweep covers — weight-like values plus the layouts'
+#: special encodings (NaN/Inf payload bits, denormals, zeros, uniform bits)
+PAYLOAD_KINDS = ("normal", "bits", "nan_inf", "denormal", "zeros")
+
+
+def make_array(
+    dtype_name: str, n: int, seed: int = 0, kind: str = "normal"
+) -> np.ndarray:
+    """Deterministic test tensor of ``n`` elements of the given payload kind."""
+    npdt = np.dtype(NP_DTYPES[dtype_name])
+    rng = np.random.default_rng(seed)
+    if kind == "zeros":
+        return np.zeros(n, npdt)
+    if kind == "bits":
+        # Uniform random bit patterns: exercises every exponent value,
+        # NaN/Inf encodings and denormals in one stream.
+        uint = {2: np.uint16, 4: np.uint32, 8: np.uint64}[npdt.itemsize]
+        return rng.integers(0, np.iinfo(uint).max, n, dtype=uint).view(npdt)
+    scale = 0.02 if npdt.itemsize == 2 else 0.3
+    vals = (rng.standard_normal(n) * scale).astype(npdt)
+    if kind == "nan_inf" and n:
+        idx = rng.integers(0, n, max(1, n // 7))
+        vals[idx[0::3]] = np.asarray(np.nan, npdt)
+        vals[idx[1::3]] = np.asarray(np.inf, npdt)
+        vals[idx[2::3]] = np.asarray(-np.inf, npdt)
+    elif kind == "denormal" and n:
+        # smallest-normal / 8 underflows to a denormal in every layout
+        # (np.finfo rejects ml_dtypes scalars; ml_dtypes.finfo covers them)
+        try:
+            tiny = np.finfo(npdt).tiny / 8
+        except ValueError:
+            tiny = float(ml_dtypes.finfo(npdt.type).tiny) / 8
+        idx = rng.integers(0, n, max(1, n // 5))
+        vals[idx] = np.asarray(tiny, npdt) * rng.choice([-1, 1], idx.size).astype(npdt)
+    return vals
+
+
+def as_bytes(arr: np.ndarray) -> bytes:
+    return np.ascontiguousarray(arr).view(np.uint8).tobytes()
+
+
+def assert_decode_parity(
+    raw: bytes,
+    dtype_name: str,
+    *,
+    config: Optional[zipnn.ZipNNConfig] = None,
+    backends: Sequence[str] = BACKENDS,
+    threads: Sequence[int] = THREADS,
+    label: str = "",
+) -> bytes:
+    """Compress once per backend (asserting encode parity), then decode the
+    host-reference blob across every backend × thread combination and
+    assert bit-exact equality with the raw bytes.  Returns the blob."""
+    cfg = zipnn.DEFAULT if config is None else config
+    ref = zipnn.compress_bytes(raw, dtype_name, cfg, backend="host")
+    assert zipnn.decompress_bytes(ref, cfg, threads=1, backend="host") == raw, (
+        f"host decode not lossless [{label}]"
+    )
+    for be in backends:
+        blob = zipnn.compress_bytes(raw, dtype_name, cfg, backend=be)
+        assert blob == ref, f"encode backend {be!r} changed blob bytes [{label}]"
+        for t in threads:
+            out = zipnn.decompress_bytes(ref, cfg, threads=t, backend=be)
+            assert out == raw, (
+                f"decode backend {be!r} × threads={t} not bit-exact [{label}]"
+            )
+    return ref
+
+
+def assert_delta_parity(
+    new: np.ndarray,
+    base: np.ndarray,
+    *,
+    config: Optional[zipnn.ZipNNConfig] = None,
+    backends: Sequence[str] = BACKENDS,
+    threads: Sequence[int] = THREADS,
+    label: str = "",
+) -> zipnn.CompressedTensor:
+    """Delta round-trip parity: same contract as :func:`assert_decode_parity`
+    for the §4.2 XOR-delta path (fused device XOR on both sides)."""
+    cfg = zipnn.DEFAULT if config is None else config
+    ref = zipnn.delta_compress(new, base, cfg, backend="host")
+    want = as_bytes(np.asarray(new))
+    for be in backends:
+        ct = zipnn.delta_compress(new, base, cfg, backend=be)
+        assert ct.blob == ref.blob, (
+            f"delta encode backend {be!r} changed blob bytes [{label}]"
+        )
+        for t in threads:
+            back = zipnn.delta_decompress(ref, base, cfg, threads=t, backend=be)
+            assert as_bytes(back) == want, (
+                f"delta decode backend {be!r} × threads={t} not bit-exact "
+                f"[{label}]"
+            )
+    return ref
+
+
+def assert_stream_parity(
+    raw: bytes,
+    dtype_name: str,
+    *,
+    config: Optional[zipnn.ZipNNConfig] = None,
+    window_bytes: int = 1 << 17,
+    backends: Sequence[str] = BACKENDS,
+    threads: Sequence[int] = THREADS,
+    label: str = "",
+) -> bytes:
+    """ZNS1 streaming parity: one compressed container, decoded through
+    ``DecompressReader`` across every backend × thread combination."""
+    cfg = zipnn.DEFAULT if config is None else config
+    sink = io.BytesIO()
+    with engine.CompressWriter(
+        sink, dtype_name, cfg, window_bytes=window_bytes
+    ) as w:
+        w.write(raw)
+    blob = sink.getvalue()
+    for be in backends:
+        for t in threads:
+            r = engine.DecompressReader(
+                io.BytesIO(blob), cfg, threads=t, backend=be
+            )
+            assert r.read() == raw, (
+                f"stream decode backend {be!r} × threads={t} not bit-exact "
+                f"[{label}]"
+            )
+    return blob
+
+
+# ---------------------------------------------------------------------------
+# full sweep
+# ---------------------------------------------------------------------------
+
+#: element counts covering empty, scalar, sub-chunk, multi-chunk and
+#: odd/unaligned shapes (the huge-tail cases ride the +1/+3 offsets)
+SWEEP_SIZES = (0, 1, 3, 257, 8_192, 40_001, 140_003)
+
+
+def sweep(
+    dtypes: Sequence[str] = DTYPES,
+    sizes: Sequence[int] = SWEEP_SIZES,
+    kinds: Sequence[str] = PAYLOAD_KINDS,
+    backends: Sequence[str] = BACKENDS,
+    threads: Sequence[int] = THREADS,
+    deltas: bool = True,
+    verbose: bool = False,
+) -> int:
+    """Run the dtype × shape × payload × delta × backend × threads sweep.
+
+    Returns the number of cases checked; raises AssertionError on the
+    first parity violation.
+    """
+    cases = 0
+    cfg = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15)  # multi-chunk at test sizes
+    for dtype in dtypes:
+        itemsize = np.dtype(NP_DTYPES[dtype]).itemsize
+        for n in sizes:
+            for kind in kinds:
+                arr = make_array(dtype, n, seed=cases, kind=kind)
+                raw = as_bytes(arr)
+                label = f"{dtype} n={n} {kind}"
+                assert_decode_parity(
+                    raw, dtype, config=cfg,
+                    backends=backends, threads=threads, label=label,
+                )
+                # huge-tail: a raw stream that is NOT a whole number of
+                # elements exercises the TAIL frame on both backends
+                assert_decode_parity(
+                    raw + b"\x09" * (itemsize - 1 or 1), dtype, config=cfg,
+                    backends=backends, threads=threads, label=label + " +tail",
+                )
+                cases += 2
+                if verbose:
+                    print(f"  ok: {label}")
+            if deltas and n:
+                base = make_array(dtype, n, seed=1000 + n, kind="normal")
+                new = np.asarray(base).copy()
+                rng = np.random.default_rng(n)
+                idx = rng.integers(0, n, max(1, n // 50))
+                new[idx] = make_array(dtype, idx.size, seed=n, kind="normal")
+                assert_delta_parity(
+                    new, base, config=cfg,
+                    backends=backends, threads=threads,
+                    label=f"{dtype} n={n} delta",
+                )
+                cases += 1
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# golden fixtures (format-stability regression guard)
+# ---------------------------------------------------------------------------
+
+def _fixture_config(d: dict) -> zipnn.ZipNNConfig:
+    return zipnn.ZipNNConfig(**d)
+
+
+def check_golden(
+    fixture_dir: str = FIXTURE_DIR,
+    backends: Sequence[str] = BACKENDS,
+    threads: Sequence[int] = THREADS,
+) -> int:
+    """Decode every checked-in golden blob (across backends × threads) and
+    assert the raw bytes match; re-encode the raw bytes and assert the blob
+    is reproduced byte-identically.  Returns the number of fixtures."""
+    with open(os.path.join(fixture_dir, "meta.json")) as f:
+        meta = json.load(f)
+
+    def rd(name: str) -> bytes:
+        with open(os.path.join(fixture_dir, name), "rb") as f:
+            return f.read()
+
+    for fx in meta["fixtures"]:
+        cfg = _fixture_config(fx["config"])
+        label = f"golden:{fx['name']}"
+        if fx["kind"] == "bytes":
+            raw, blob = rd(fx["raw"]), rd(fx["blob"])
+            for be in backends:
+                for t in threads:
+                    out = zipnn.decompress_bytes(blob, cfg, threads=t, backend=be)
+                    assert out == raw, f"{label} decode {be}×{t} != frozen raw"
+            re = zipnn.compress_bytes(raw, fx["dtype"], cfg)
+            assert re == blob, f"{label} re-encode != frozen blob"
+        elif fx["kind"] == "delta":
+            raw, base_raw, blob = rd(fx["raw"]), rd(fx["base"]), rd(fx["blob"])
+            npdt = np.dtype(NP_DTYPES[fx["dtype"]])
+            new = np.frombuffer(raw, dtype=npdt).copy()
+            base = np.frombuffer(base_raw, dtype=npdt).copy()
+            ct = zipnn.CompressedTensor(blob, fx["dtype"], tuple(fx["shape"]))
+            for be in backends:
+                for t in threads:
+                    back = zipnn.delta_decompress(ct, base, cfg, threads=t, backend=be)
+                    assert as_bytes(back) == raw, (
+                        f"{label} decode {be}×{t} != frozen raw"
+                    )
+            re = zipnn.delta_compress(new, base, cfg)
+            assert re.blob == blob, f"{label} re-encode != frozen blob"
+        elif fx["kind"] == "stream":
+            raw, blob = rd(fx["raw"]), rd(fx["blob"])
+            for be in backends:
+                for t in threads:
+                    r = engine.DecompressReader(
+                        io.BytesIO(blob), cfg, threads=t, backend=be
+                    )
+                    assert r.read() == raw, f"{label} decode {be}×{t} != frozen raw"
+            sink = io.BytesIO()
+            with engine.CompressWriter(
+                sink, fx["dtype"], cfg, window_bytes=fx["window_bytes"]
+            ) as w:
+                w.write(raw)
+            assert sink.getvalue() == blob, f"{label} re-encode != frozen blob"
+        else:
+            raise ValueError(f"unknown fixture kind {fx['kind']!r}")
+    return len(meta["fixtures"])
+
+
+# ---------------------------------------------------------------------------
+# CLI — the CI decode-backend parity smoke
+# ---------------------------------------------------------------------------
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="reduced sweep (host vs device × threads 1,4; one payload "
+             "kind, small sizes) — the CI smoke",
+    )
+    args = ap.parse_args(argv)
+    if args.smoke:
+        n = sweep(
+            dtypes=("bfloat16", "float32"),
+            sizes=(0, 3, 40_001),
+            kinds=("normal", "bits"),
+            backends=("host", "device"),
+            threads=(1, 4),
+        )
+    else:
+        n = sweep(verbose=True)
+    g = check_golden()
+    print(
+        f"decode parity OK: {n} sweep cases bit-exact across "
+        f"backends × threads; {g} golden fixtures decode + re-encode stable"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

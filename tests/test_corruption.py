@@ -1,0 +1,258 @@
+"""Corruption/truncation fuzz: a damaged stream must raise a clean error —
+never a wrong-bytes success, never a hang (ISSUE 3 satellite).
+
+Two surfaces:
+
+* ``DecompressReader`` / ``decompress_file`` over ``ZNS1`` containers —
+  frame CRCs cover every byte of the frame body (the inner ZNN1 header,
+  plane tables, metadata map and Huffman payloads), so *any* flip there
+  must be detected.  Flips in the stream header hit explicit validation.
+* bare ``decompress_bytes`` over a ``ZNN1`` blob — payload and metadata
+  flips are caught by the per-chunk CRCs; header flips by the parse-time
+  validation; Huffman damage additionally by the decoder's bit-cursor
+  check.  (The raw u64 ``n_bytes`` header field and the 128-byte Huffman
+  table have no redundancy of their own at this layer — single-bit damage
+  there is only guaranteed detectable under the framed container, which is
+  why checkpoints/files always travel as ZNS1.  They are excluded here and
+  covered by the ZNS1 fuzz above.)
+
+A "clean error" is ``ValueError`` / ``OSError`` (``IOError``).  Equality
+with the original output is also accepted: some bytes are genuinely
+don't-care (e.g. the recorded window size) and flipping them must not
+*break* anything either.
+"""
+
+import io
+import struct
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+import parity
+from repro.core import container, engine, zipnn
+
+CLEAN = (ValueError, OSError)
+
+CFG = zipnn.ZipNNConfig(chunk_param_bytes=1 << 14)
+
+
+def _bf16_bytes(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return parity.as_bytes((rng.standard_normal(n) * 0.02).astype(ml_dtypes.bfloat16))
+
+
+def _zns1(raw: bytes, window: int = 1 << 15) -> bytes:
+    sink = io.BytesIO()
+    with engine.CompressWriter(sink, "bfloat16", CFG, window_bytes=window) as w:
+        w.write(raw)
+    return sink.getvalue()
+
+
+def _read_all(blob: bytes) -> bytes:
+    return engine.DecompressReader(io.BytesIO(blob), CFG).read()
+
+
+def _positions(n: int, step: int):
+    """Deterministic sample: every ``step``-th byte plus both edges."""
+    pos = set(range(0, n, step))
+    pos.update((0, 1, n // 2, n - 2, n - 1))
+    return sorted(p for p in pos if 0 <= p < n)
+
+
+class TestZNS1Corruption:
+    """Frame-CRC-protected container: every section (stream header, inner
+    ZNN1 header, plane table, metadata, Huffman payload) is fuzzed."""
+
+    def setup_method(self):
+        self.raw = _bf16_bytes(40_000, seed=1)
+        self.blob = _zns1(self.raw)
+        assert _read_all(self.blob) == self.raw
+
+    @pytest.mark.parametrize("flip", [0xFF, 0x01, 0x80])
+    def test_single_byte_corruption_everywhere(self, flip):
+        for pos in _positions(len(self.blob), step=211):
+            bad = bytearray(self.blob)
+            bad[pos] ^= flip
+            try:
+                out = _read_all(bytes(bad))
+            except CLEAN:
+                continue
+            assert out == self.raw, (
+                f"byte {pos} ^ {flip:#x}: wrong-bytes success "
+                f"({len(out)} bytes out)"
+            )
+
+    def test_truncation_everywhere(self):
+        for n in _positions(len(self.blob), step=977):
+            with pytest.raises(CLEAN):
+                _read_all(self.blob[:n])
+
+    def test_frame_kind_corruption(self):
+        # the first frame record sits right after the stream header
+        pos = engine._SHDR.size          # kind byte of frame 0
+        bad = bytearray(self.blob)
+        bad[pos] = 7
+        with pytest.raises(CLEAN, match="frame kind"):
+            _read_all(bytes(bad))
+
+    def test_missing_end_frame(self):
+        # drop the trailing end frame entirely
+        with pytest.raises(CLEAN, match="end frame"):
+            _read_all(self.blob[: -engine._FRAME.size])
+
+    def test_whole_frame_dropped(self):
+        """Remove one entire (record + body) frame: the end frame's total
+        raw length must reject the stream as incomplete."""
+        hdr = engine._SHDR.size
+        kind, raw_len, comp_len, crc = engine._FRAME.unpack(
+            self.blob[hdr : hdr + engine._FRAME.size]
+        )
+        assert kind == 1
+        cut = hdr + engine._FRAME.size + comp_len
+        bad = self.blob[:hdr] + self.blob[cut:]
+        with pytest.raises(CLEAN):
+            _read_all(bad)
+
+    def test_decompress_file_corruption(self, tmp_path):
+        src = tmp_path / "bad.znns"
+        bad = bytearray(self.blob)
+        bad[len(bad) // 2] ^= 0x10       # mid-payload flip
+        src.write_bytes(bytes(bad))
+        with pytest.raises(CLEAN):
+            engine.decompress_file(str(src), str(tmp_path / "out.bin"))
+
+    def test_corruption_with_threads_and_device_backend(self):
+        """The prefetching reader and the device decode path reject damage
+        identically — no path may turn a flip into silent output."""
+        bad = bytearray(self.blob)
+        bad[engine._SHDR.size + engine._FRAME.size + 100] ^= 0x40
+        for threads, backend in ((4, "host"), (1, "device"), (4, "device")):
+            with pytest.raises(CLEAN):
+                engine.DecompressReader(
+                    io.BytesIO(bytes(bad)), CFG, threads=threads, backend=backend
+                ).read()
+
+
+class TestZNN1Corruption:
+    """Bare in-memory blobs: per-chunk CRCs + parse validation + the
+    Huffman bit-cursor check."""
+
+    def setup_method(self):
+        self.raw = _bf16_bytes(40_000, seed=2)
+        self.blob = zipnn.compress_bytes(self.raw, "bfloat16", CFG)
+        self.meta, _ = container.unpack_stream(self.blob)
+        assert zipnn.decompress_bytes(self.blob, CFG) == self.raw
+
+    def _sections(self):
+        """(start, end, name) spans with per-layer redundancy (see module
+        docstring for what is excluded and why)."""
+        hdr = container._HDR.size
+        # u64 n_bytes sits at offset 24..32 of the header; exclude it
+        n_bytes_off = struct.calcsize("<4sHH16s")
+        spans = [
+            (0, n_bytes_off, "header-pre"),
+            (n_bytes_off + 8, hdr, "header-post"),
+        ]
+        table_end = self.meta.payload_base - sum(
+            len(pe) * container._REC.size for pe in self.meta.entries
+        )
+        spans.append((table_end, self.meta.payload_base, "metadata-map"))
+        spans.append((self.meta.payload_base, len(self.blob), "payloads"))
+        return spans
+
+    @pytest.mark.parametrize("flip", [0xFF, 0x01])
+    def test_section_corruption(self, flip):
+        for start, end, name in self._sections():
+            for pos in _positions(end - start, step=97):
+                bad = bytearray(self.blob)
+                bad[start + pos] ^= flip
+                try:
+                    out = zipnn.decompress_bytes(bytes(bad), CFG)
+                except CLEAN:
+                    continue
+                assert out == self.raw, (
+                    f"{name} byte {start + pos} ^ {flip:#x}: "
+                    f"wrong-bytes success"
+                )
+
+    def test_truncation(self):
+        for n in _positions(len(self.blob), step=499):
+            try:
+                out = zipnn.decompress_bytes(self.blob[:n], CFG)
+            except CLEAN:
+                continue
+            assert out == self.raw, f"truncation at {n}: wrong-bytes success"
+
+    def test_bad_magic_version_layout(self):
+        for pos, val, match in (
+            (0, ord("X"), "not a ZNN1"),
+            (4, 0x7F, "unsupported ZNN version"),
+            (8, ord("q"), "layout"),
+        ):
+            bad = bytearray(self.blob)
+            bad[pos] = val
+            with pytest.raises(ValueError, match=match):
+                zipnn.decompress_bytes(bytes(bad), CFG)
+
+    def test_zero_chunk_bytes(self):
+        off = struct.calcsize("<4sHH16sQ")       # chunk_bytes u32 offset
+        bad = bytearray(self.blob)
+        bad[off : off + 4] = b"\x00\x00\x00\x00"
+        with pytest.raises(ValueError, match="chunk_bytes"):
+            zipnn.decompress_bytes(bytes(bad), CFG)
+
+    def test_payload_crc_is_verified_on_both_backends(self):
+        bad = bytearray(self.blob)
+        bad[self.meta.payload_base + 11] ^= 0x20
+        for backend in ("host", "device"):
+            with pytest.raises(CLEAN):
+                zipnn.decompress_bytes(bytes(bad), CFG, backend=backend)
+
+    def test_method_flip_to_zero_rejected(self):
+        """A metadata flip that turns a payload chunk into ZERO must not
+        silently produce zeros (the payload is still declared)."""
+        rec_off = self.meta.payload_base - sum(
+            len(pe) * container._REC.size for pe in self.meta.entries
+        )
+        assert self.blob[rec_off] != 1           # first record's method
+        bad = bytearray(self.blob)
+        bad[rec_off] = 1                          # Method.ZERO
+        with pytest.raises(CLEAN):
+            zipnn.decompress_bytes(bytes(bad), CFG)
+
+    def test_huge_header_counts_do_not_hang_or_allocate(self):
+        """A corrupted n_bytes cannot drive an unbounded metadata parse:
+        the map is bounds-checked against the blob before the loop."""
+        off = struct.calcsize("<4sHH16s")
+        bad = bytearray(self.blob)
+        bad[off : off + 8] = struct.pack("<Q", 1 << 62)
+        with pytest.raises(ValueError, match="truncated ZNN1 metadata"):
+            zipnn.decompress_bytes(bytes(bad), CFG)
+
+    def test_empty_and_garbage_blobs(self):
+        for blob in (b"", b"\x00" * 3, b"garbage" * 10, b"ZNN1" + b"\x00" * 5):
+            with pytest.raises(CLEAN):
+                zipnn.decompress_bytes(blob, CFG)
+        for blob in (b"", b"ZNS1", b"\xff" * 64):
+            with pytest.raises(CLEAN):
+                engine.DecompressReader(io.BytesIO(blob), CFG).read()
+
+
+@pytest.mark.slow
+class TestDenseCorruptionSweep:
+    """Denser flip sweep (every 31st byte × 2 masks) over a ZNS1 stream —
+    the heavyweight version of the sampled test above."""
+
+    def test_dense_zns1_sweep(self):
+        raw = _bf16_bytes(30_000, seed=3)
+        blob = _zns1(raw, window=1 << 14)
+        for flip in (0xFF, 0x04):
+            for pos in _positions(len(blob), step=31):
+                bad = bytearray(blob)
+                bad[pos] ^= flip
+                try:
+                    out = _read_all(bytes(bad))
+                except CLEAN:
+                    continue
+                assert out == raw, f"byte {pos} ^ {flip:#x}: wrong-bytes success"

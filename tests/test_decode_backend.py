@@ -1,0 +1,298 @@
+"""Device plane-consumer decode backend: bit-parity with the host path.
+
+The contract under test (ISSUE 3): for every backend × thread-count
+combination, *decoded* bytes are **bit-identical** — the knobs change
+wall-clock only.  All parity assertions go through the shared harness in
+``tests/parity.py`` (also the CI smoke), so every decode test and the
+smoke enforce one contract.  Device kernels run in interpret mode on CPU,
+so these are exact-semantics tests, not speed tests.
+"""
+
+import io
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+
+import parity
+from repro.core import bitlayout, device_plane, device_unplane, engine, zipnn
+
+
+def _bf16(n, seed=0, scale=0.02):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(ml_dtypes.bfloat16)
+
+
+def _fp32(n, seed=0, scale=0.3):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+class TestDecodeParity:
+    """Acceptance criterion: bf16/fp32/fp16 × {host, device, auto} ×
+    {1, 4} threads, all bit-exact through the shared harness."""
+
+    @pytest.mark.parametrize("dtype", parity.DTYPES)
+    def test_bytes_parity(self, dtype):
+        arr = parity.make_array(dtype, 150_003, seed=1)
+        parity.assert_decode_parity(parity.as_bytes(arr), dtype, label=dtype)
+
+    def test_unaligned_tail_parity(self):
+        raw = parity.as_bytes(_bf16(70_000, seed=2)) + b"\x05"
+        parity.assert_decode_parity(raw, "bfloat16", label="tail")
+
+    def test_empty_and_tiny(self):
+        for n in (0, 1, 7):
+            arr = parity.make_array("bfloat16", n, seed=n)
+            parity.assert_decode_parity(
+                parity.as_bytes(arr), "bfloat16", label=f"n={n}"
+            )
+
+    @pytest.mark.parametrize("dtype", parity.DTYPES)
+    def test_delta_parity(self, dtype):
+        base = parity.make_array(dtype, 120_000, seed=3)
+        new = np.asarray(base).copy()
+        idx = np.random.default_rng(4).integers(0, new.size, new.size // 50)
+        new[idx] = parity.make_array(dtype, idx.size, seed=5)
+        parity.assert_delta_parity(new, base, label=f"delta {dtype}")
+
+    def test_delta_all_zero(self):
+        base = _fp32(80_000, seed=6)
+        parity.assert_delta_parity(base, base, label="zero delta")
+
+    def test_stream_reader_parity(self):
+        raw = parity.as_bytes(_bf16(300_000, seed=7))
+        parity.assert_stream_parity(raw, "bfloat16", label="stream")
+
+    def test_decompress_file_device_backend(self, tmp_path):
+        data = parity.as_bytes(_bf16(300_000, seed=8))
+        src, dst = tmp_path / "in.bin", tmp_path / "out.znns"
+        src.write_bytes(data)
+        engine.compress_file(str(src), str(dst), "bfloat16", window_bytes=1 << 18)
+        for be in ("host", "device"):
+            back = tmp_path / f"back_{be}.bin"
+            n = engine.decompress_file(str(dst), str(back), threads=4, backend=be)
+            assert n == len(data)
+            assert back.read_bytes() == data
+
+    def test_pytree_batched_decode_parity(self):
+        import jax
+
+        tree = {
+            "wte": _bf16(70_000, seed=9).reshape(700, 100),
+            "tiny": [_bf16(33, seed=10), _bf16(1, seed=11)],
+            "zeros": np.zeros(40_000, ml_dtypes.bfloat16),
+            "f32": _fp32(20_000, seed=12),
+            "f16": parity.make_array("float16", 9_000, seed=13),
+            "int": np.arange(100, dtype=np.int32),   # non-rotated → host
+            "step": np.asarray(7, dtype=np.int32),
+        }
+        man = zipnn.compress_pytree(tree)
+        host = zipnn.decompress_pytree(man, backend="host")
+        dev = zipnn.decompress_pytree(man, threads=4, backend="device")
+        def u8(x):
+            return np.ascontiguousarray(x).reshape(-1).view(np.uint8)
+
+        for a, b, c in zip(
+            jax.tree_util.tree_leaves(tree),
+            jax.tree_util.tree_leaves(host),
+            jax.tree_util.tree_leaves(dev),
+        ):
+            np.testing.assert_array_equal(u8(a), u8(b))
+            np.testing.assert_array_equal(u8(b), u8(c))
+
+
+class TestDeviceUnplaneModule:
+    def test_consume_inverts_produce(self):
+        layout = bitlayout.layout_for("bfloat16")
+        params = zipnn.DEFAULT.plane_params(2)
+        arr = _bf16(262_144, seed=20)
+        raw = parity.as_bytes(arr)
+        planes, _ = device_plane.produce_planes(
+            np.frombuffer(raw, np.uint8), layout, params
+        )
+        back = device_unplane.consume_planes(planes, layout)
+        np.testing.assert_array_equal(back, np.frombuffer(raw, np.uint8))
+
+    def test_consume_matches_from_planes(self):
+        layout = bitlayout.layout_for("float32")
+        raw = np.frombuffer(parity.as_bytes(_fp32(65_536, seed=21)), np.uint8)
+        planes = bitlayout.to_planes(raw, layout)
+        dev = device_unplane.consume_planes(planes, layout)
+        host = bitlayout.from_planes(planes, layout)
+        np.testing.assert_array_equal(dev, host)
+
+    def test_batched_matches_single(self):
+        layout = bitlayout.layout_for("bfloat16")
+        leaves = [_bf16(40_000, seed=22), _bf16(5, seed=23),
+                  np.zeros(0, ml_dtypes.bfloat16), _bf16(131_072, seed=24)]
+        planes_list = [
+            bitlayout.to_planes(
+                np.frombuffer(parity.as_bytes(l), np.uint8), layout
+            )
+            for l in leaves
+        ]
+        batched = device_unplane.consume_planes_batched(planes_list, layout)
+        for leaf, planes, got in zip(leaves, planes_list, batched):
+            single = device_unplane.consume_planes(planes, layout)
+            np.testing.assert_array_equal(got, single)
+            np.testing.assert_array_equal(
+                got, np.frombuffer(parity.as_bytes(leaf), np.uint8)
+            )
+
+    def test_batched_delta_bases(self):
+        layout = bitlayout.layout_for("bfloat16")
+        news = [_bf16(30_000, seed=25), _bf16(17, seed=26)]
+        bases = [_bf16(30_000, seed=27), None]
+        planes_list = []
+        for new, base in zip(news, bases):
+            x = np.frombuffer(parity.as_bytes(new), np.uint8)
+            if base is not None:
+                x = np.bitwise_xor(
+                    x, np.frombuffer(parity.as_bytes(base), np.uint8)
+                )
+            planes_list.append(bitlayout.to_planes(x, layout))
+        back = device_unplane.consume_planes_batched(
+            planes_list, layout, bases=bases
+        )
+        for new, got in zip(news, back):
+            np.testing.assert_array_equal(
+                got, np.frombuffer(parity.as_bytes(new), np.uint8)
+            )
+
+    def test_supports_and_resolve(self):
+        assert device_unplane.supports(bitlayout.layout_for("bfloat16"))
+        assert device_unplane.supports(bitlayout.layout_for("float16"))
+        assert device_unplane.supports(bitlayout.layout_for("float32"))
+        assert not device_unplane.supports(bitlayout.layout_for("int32"))
+        assert not device_unplane.supports(bitlayout.layout_for("uint8"))
+        assert not device_unplane.supports(bitlayout.layout_for("float64"))
+        lay = bitlayout.layout_for("bfloat16")
+        assert device_unplane.resolve(None, lay) == "host"
+        assert device_unplane.resolve("host", lay) == "host"
+        assert device_unplane.resolve("device", lay) == "device"
+        assert (
+            device_unplane.resolve("device", bitlayout.layout_for("int32"))
+            == "host"
+        )
+        with pytest.raises(ValueError, match="unknown plane backend"):
+            device_unplane.resolve("gpu", lay)
+
+    def test_auto_without_accelerator_is_host_unless_device_base(self):
+        import jax
+
+        lay = bitlayout.layout_for("bfloat16")
+        expected = "host" if jax.default_backend() == "cpu" else "device"
+        assert device_unplane.resolve("auto", lay) == expected
+        # a device-resident base flips auto to device only on accelerators;
+        # CPU jax arrays do not count (no upload is worth paying for)
+        base = jnp.asarray(_bf16(1024, seed=28))
+        assert device_unplane.resolve("auto", lay, base=base) == expected
+
+    def test_unknown_layout_name_raises(self):
+        with pytest.raises(ValueError, match="unknown ZNN1 layout"):
+            bitlayout.layout_by_name("nope")
+
+
+class TestEngineAwareDecodeSubsystems:
+    def test_checkpoint_restore_backend_parity(self, tmp_path):
+        from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+        state = {"w": _bf16(50_000, seed=30), "opt": {"m": _fp32(20_000, seed=31)}}
+        outs = {}
+        for name, backend in (("host", "host"), ("dev", "device")):
+            cfg = CheckpointConfig(
+                directory=str(tmp_path / name), backend=backend, async_save=False
+            )
+            m = CheckpointManager(cfg)
+            m.save(1, state, blocking=True)
+            step, back = m.restore()
+            assert step == 1
+            outs[name] = back
+        for key in ("w",):
+            np.testing.assert_array_equal(
+                np.asarray(outs["host"][key]).view(np.uint8),
+                np.asarray(outs["dev"][key]).view(np.uint8),
+            )
+            np.testing.assert_array_equal(
+                np.asarray(outs["dev"][key]).view(np.uint8),
+                np.ascontiguousarray(state[key]).view(np.uint8),
+            )
+
+    def test_batched_delta_saves_match_serial(self, tmp_path):
+        """Satellite: manager delta saves route through
+        produce_planes_batched(bases=...) on the device backend; blobs are
+        byte-identical to the leaf-at-a-time host path."""
+        from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+        state1 = {
+            "w": _bf16(50_000, seed=32),
+            "b": _bf16(300, seed=33),
+            "opt": {"m": _fp32(20_000, seed=34)},
+            "step": np.asarray(1, np.int32),
+        }
+        state2 = {
+            "w": np.asarray(state1["w"]).copy(),
+            "b": np.asarray(state1["b"]).copy(),
+            "opt": {"m": state1["opt"]["m"] * np.float32(1.01)},
+            "step": np.asarray(2, np.int32),
+        }
+        w2 = np.asarray(state2["w"]).reshape(-1)
+        idx = np.random.default_rng(35).integers(0, w2.size, w2.size // 60)
+        w2[idx] = (np.asarray(w2[idx], np.float32) * 1.01).astype(ml_dtypes.bfloat16)
+        for name, backend in (("host", "host"), ("dev", "device")):
+            cfg = CheckpointConfig(
+                directory=str(tmp_path / name), backend=backend,
+                async_save=False, base_every=5,
+            )
+            m = CheckpointManager(cfg)
+            m.save(1, state1, blocking=True)       # base
+            m.save(2, state2, blocking=True)       # delta vs base
+        for step in (1, 2):
+            h = (tmp_path / "host" / f"step_{step}" / "data.bin").read_bytes()
+            d = (tmp_path / "dev" / f"step_{step}" / "data.bin").read_bytes()
+            assert h == d, f"step {step} blobs differ across backends"
+
+    def test_delta_compress_batched_matches_serial(self):
+        news = [_bf16(40_000, seed=36), _bf16(64, seed=37), _fp32(9_000, seed=38)]
+        bases = [_bf16(40_000, seed=39), _bf16(64, seed=37), _fp32(9_000, seed=40)]
+        serial = [zipnn.delta_compress(a, b) for a, b in zip(news, bases)]
+        for be in ("host", "device"):
+            batched = zipnn.delta_compress_batched(news, bases, backend=be)
+            assert [c.blob for c in batched] == [c.blob for c in serial], be
+            for i, ct in enumerate(batched):
+                back = zipnn.delta_decompress(ct, bases[i], backend=be)
+                np.testing.assert_array_equal(
+                    back.view(np.uint8),
+                    np.ascontiguousarray(news[i]).view(np.uint8),
+                )
+
+    def test_grad_sync_decode_backend(self):
+        import jax
+
+        from repro.distributed.grad_sync import GradSync
+
+        tree = {"w": _bf16(60_000, seed=41).reshape(300, 200),
+                "b": np.zeros(256, np.float32)}
+        manifest, _ = GradSync().pack(tree)
+        back = GradSync(threads=4, backend="device").unpack(manifest)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(a).view(np.uint8), np.asarray(b).view(np.uint8)
+            )
+
+    def test_hub_download_decode_backend(self, tmp_path):
+        from repro.checkpoint import hub
+
+        data = parity.as_bytes(_bf16(200_000, seed=42))
+        src = tmp_path / "model.bin"
+        src.write_bytes(data)
+        rep = hub.simulate_file_transfer(
+            str(src), "bfloat16", "first_download_home",
+            window_bytes=1 << 18, threads=2, backend="device",
+        )
+        assert rep.raw_bytes == len(data)
+        assert rep.overlapped_speedup > 0

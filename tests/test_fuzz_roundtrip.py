@@ -1,0 +1,127 @@
+"""Property/fuzz round-trip tests: compress_bytes → decompress_bytes is the
+identity for arbitrary payloads, across backend × threads (ISSUE 3
+satellite).
+
+Strategies run through ``tests/_hyp_compat.py`` (real hypothesis when
+installed, a seeded fallback otherwise).  Coverage axes: every registered
+dtype layout, odd/empty/huge-tail lengths, NaN/Inf/denormal payloads, both
+entropy coders, backend ∈ {host, device, auto} × threads ∈ {1, 4}.
+"""
+
+import ml_dtypes
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, strategies as st
+
+import parity
+from repro.core import bitlayout, zipnn
+
+ALL_DTYPES = sorted(bitlayout.LAYOUTS)          # includes int/uint/bool
+SMALL_CFG = zipnn.ZipNNConfig(chunk_param_bytes=1 << 14)
+
+
+def _roundtrip(raw: bytes, dtype_name: str, backend: str, threads: int) -> None:
+    blob = zipnn.compress_bytes(raw, dtype_name, SMALL_CFG, backend=backend)
+    ref = zipnn.compress_bytes(raw, dtype_name, SMALL_CFG, backend="host")
+    assert blob == ref, f"{dtype_name}/{backend}: encode bytes differ from host"
+    for be in ("host", backend):
+        out = zipnn.decompress_bytes(blob, SMALL_CFG, threads=threads, backend=be)
+        assert out == raw, f"{dtype_name}/{be}×{threads}: round-trip not identity"
+
+
+@given(
+    st.sampled_from(ALL_DTYPES),
+    st.integers(min_value=0, max_value=40_000),
+    st.sampled_from(["host", "device", "auto"]),
+    st.sampled_from([1, 4]),
+    st.integers(min_value=0, max_value=1 << 30),
+)
+@settings(max_examples=40, deadline=None)
+def test_random_bytes_roundtrip(dtype_name, n_bytes, backend, threads, seed):
+    """Arbitrary byte streams (any length, any dtype interpretation, any
+    backend × threads) round-trip bit-exactly — lengths are deliberately
+    NOT aligned to the itemsize, so TAIL frames fuzz too."""
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 256, n_bytes, dtype=np.uint8).tobytes()
+    _roundtrip(raw, dtype_name, backend, threads)
+
+
+@given(
+    st.sampled_from(list(parity.DTYPES)),
+    st.sampled_from(list(parity.PAYLOAD_KINDS)),
+    st.integers(min_value=0, max_value=30_000),
+    st.integers(min_value=0, max_value=1 << 20),
+)
+@settings(max_examples=30, deadline=None)
+def test_float_payloads_roundtrip(dtype_name, kind, n, seed):
+    """Weight-like, NaN/Inf, denormal, zero and uniform-bit float payloads
+    round-trip across every backend (device sweep via the shared harness)."""
+    arr = parity.make_array(dtype_name, n, seed=seed, kind=kind)
+    parity.assert_decode_parity(
+        parity.as_bytes(arr), dtype_name, config=SMALL_CFG,
+        label=f"{dtype_name}/{kind}/n={n}",
+    )
+
+
+@pytest.mark.parametrize("dtype", parity.DTYPES)
+@pytest.mark.parametrize("kind", ["nan_inf", "denormal"])
+def test_special_values_exact(dtype, kind):
+    """Deterministic NaN/Inf/denormal coverage: the bit patterns survive
+    rotate/un-rotate on both backends exactly (no canonicalization)."""
+    arr = parity.make_array(dtype, 20_000, seed=99, kind=kind)
+    raw = parity.as_bytes(arr)
+    npdt = np.dtype(parity.NP_DTYPES[dtype])
+    if kind == "nan_inf":
+        assert np.isnan(np.asarray(arr, np.float32)).any()
+    blob = zipnn.compress_bytes(raw, dtype)
+    for be in ("host", "device"):
+        out = zipnn.decompress_bytes(blob, backend=be)
+        np.testing.assert_array_equal(
+            np.frombuffer(out, npdt).view(np.uint8),
+            np.frombuffer(raw, np.uint8),
+        )
+
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float32"])
+def test_huge_tail_shapes(dtype):
+    """Every possible remainder r in [1, itemsize) rides the TAIL frame."""
+    itemsize = np.dtype(parity.NP_DTYPES[dtype]).itemsize
+    body = parity.as_bytes(parity.make_array(dtype, 9_001, seed=7))
+    for r in range(1, itemsize):
+        raw = body + bytes(range(1, r + 1))
+        parity.assert_decode_parity(
+            raw, dtype, backends=("host", "device"), threads=(1, 4),
+            label=f"{dtype} tail r={r}",
+        )
+
+
+@given(
+    st.sampled_from(["bfloat16", "float32", "float16"]),
+    st.integers(min_value=1, max_value=20_000),
+    st.floats(min_value=0.0, max_value=0.2),
+    st.integers(min_value=0, max_value=1 << 20),
+)
+@settings(max_examples=15, deadline=None)
+def test_delta_roundtrip_fuzz(dtype_name, n, change_frac, seed):
+    """Random (new, base) pairs with a random changed fraction round-trip
+    through the delta path across backend × threads."""
+    base = parity.make_array(dtype_name, n, seed=seed)
+    new = np.asarray(base).copy()
+    n_changed = int(n * change_frac)
+    if n_changed:
+        rng = np.random.default_rng(seed + 1)
+        idx = rng.integers(0, n, n_changed)
+        new[idx] = parity.make_array(dtype_name, n_changed, seed=seed + 2, kind="bits")
+    parity.assert_delta_parity(
+        new, base, backends=("host", "device"), threads=(1, 4),
+        label=f"{dtype_name} delta n={n}",
+    )
+
+
+@pytest.mark.slow
+def test_full_parity_sweep():
+    """The complete dtype × shape × payload × delta × backend × threads
+    sweep from the shared harness — the heavyweight version of the CI
+    smoke (`python tests/parity.py --smoke`)."""
+    cases = parity.sweep()
+    assert cases >= 100

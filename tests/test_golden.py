@@ -1,0 +1,42 @@
+"""Golden-blob format-stability guard (ISSUE 3 satellite).
+
+The fixtures under ``tests/fixtures/`` freeze the ZNN1/ZNS1 container
+format and codec byte stream as of this PR.  Today's code must decode them
+bit-exactly (on every backend × thread combination) AND re-encode the
+frozen raw bytes to the byte-identical blob.  A failure here means the
+wire format changed: bump the container version and regenerate via
+``tests/fixtures/generate_fixtures.py`` — deliberately, never silently.
+"""
+
+import json
+import os
+
+import pytest
+
+import parity
+
+
+def test_fixture_dir_is_populated():
+    with open(os.path.join(parity.FIXTURE_DIR, "meta.json")) as f:
+        meta = json.load(f)
+    assert len(meta["fixtures"]) >= 5
+    kinds = {fx["kind"] for fx in meta["fixtures"]}
+    assert kinds == {"bytes", "delta", "stream"}
+    for fx in meta["fixtures"]:
+        for key in ("raw", "blob", "base"):
+            if key in fx:
+                path = os.path.join(parity.FIXTURE_DIR, fx[key])
+                assert os.path.getsize(path) > 0, fx[key]
+
+
+def test_golden_decode_and_reencode():
+    assert parity.check_golden() >= 5
+
+
+@pytest.mark.parametrize("threads", [1, 4])
+def test_golden_decode_backends(threads):
+    """The acceptance sweep scoped to the frozen blobs: host, device and
+    auto all reproduce the frozen raw bytes for 1 and 4 threads."""
+    parity.check_golden(
+        backends=("host", "device", "auto"), threads=(threads,)
+    )
