@@ -22,7 +22,11 @@ decompress throughput is reported for both backends and the decoded bytes
 are asserted bit-identical to the raw input, without touching the host
 rows' compress numbers.  On a CPU-only host the kernels run in interpret
 mode, so device-row throughput is a correctness artifact, not a speed
-claim (flagged in the row).  Results are written to ``BENCH_table3.json``.
+claim (flagged in the row).  The device sweep also runs the **full-device
+compress path** (fused plane producer + fused Huffman bit-pack entropy
+stage, ``core/device_entropy.py``) under the canonical ``huffman`` coder
+and asserts those blobs byte-identical to the host canonical coder's.
+Results are written to ``BENCH_table3.json``.
 """
 
 from __future__ import annotations
@@ -139,6 +143,41 @@ def run(
                          "not a speed claim"
                      ) if jax.default_backend() != "tpu" else None}
                 )
+
+            # Full-device compress path: fused plane producer AND fused
+            # Huffman bit-pack entropy stage (core/device_entropy.py) under
+            # the canonical 'huffman' coder; blobs asserted byte-identical
+            # to the host canonical coder's.
+            cfg_h = zipnn.ZipNNConfig(backend="huffman")
+            huff_host, t_hc = _timed(
+                lambda: zipnn.compress_bytes(raw, dtype, cfg_h, backend="host"),
+                reps=reps,
+            )
+            rows.append(
+                {"model": name, "method": "ZipNN(huffman)",
+                 "comp_pct": round(100 * len(huff_host) / nb, 1),
+                 "comp_gbps": round(nb / t_hc / 1e9, 3),
+                 "decomp_gbps": None}
+            )
+            dev_h, t_c = _timed(
+                lambda: zipnn.compress_bytes(
+                    raw, dtype, cfg_h, backend="device", entropy_backend="device"
+                ),
+                reps=reps,
+            )
+            assert dev_h == huff_host, "device-entropy blob != host blob"
+            assert zipnn.decompress_bytes(dev_h, cfg_h) == raw
+            rows.append(
+                {"model": name, "method": "ZipNN(device+entropy)",
+                 "comp_pct": round(100 * len(dev_h) / nb, 1),
+                 "comp_gbps": round(nb / t_c / 1e9, 3),
+                 "decomp_gbps": None,
+                 "parity": "byte-identical",
+                 "note": (
+                     "interpret-mode kernels (no TPU): parity check, "
+                     "not a speed claim"
+                 ) if jax.default_backend() != "tpu" else None}
+            )
     return rows
 
 

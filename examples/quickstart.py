@@ -92,6 +92,29 @@ def main():
     # backend=...), DecompressReader(..., backend=...), and
     # CheckpointConfig(backend="device") for manager.restore/shard_restore.
 
+    # 8. The full-device compress path.  With the canonical 'huffman' coder,
+    # backend="device" now runs BOTH compression halves on device: the fused
+    # plane producer (XOR-delta → rotate+byte-group → probe histograms) and
+    # the fused Huffman bit-pack entropy stage (core/device_entropy.py) —
+    # the host only builds the 256-entry canonical table, applies the
+    # expansion guard, and frames the container.  entropy_backend= decouples
+    # the two stages for mixed mode.  Blobs are byte-identical on every
+    # combination — that's the contract tests/parity.py enforces.
+    cfg_h = zipnn.ZipNNConfig(backend="huffman")
+    ref = zipnn.compress_bytes(raw, "bfloat16", cfg_h, backend="host")
+    full_dev = zipnn.compress_bytes(
+        raw, "bfloat16", cfg_h, backend="device"       # plane + entropy
+    )
+    mixed = zipnn.compress_bytes(
+        raw, "bfloat16", cfg_h,
+        backend="host", entropy_backend="device",      # host probe, device pack
+    )
+    assert ref == full_dev == mixed
+    print("full-device compress (plane + fused Huffman bit-pack): "
+          f"{len(ref)/1e6:.2f} MB, byte-identical across backends ✓")
+    # The hufflib (zlib) coder has no device bitstream — entropy_backend is
+    # still safe to set there: it silently stays on the host path.
+
 
 if __name__ == "__main__":
     main()

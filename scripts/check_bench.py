@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Bench-regression gate: compare a fresh ``BENCH_table3_smoke.json``
+against the checked-in baseline (``benchmarks/baselines/table3_smoke.json``).
+
+Two classes of check, matching what the numbers actually guarantee:
+
+* **Compression ratio** (``comp_pct``) — deterministic: blobs are
+  byte-identical across threads/backends, so the ratio must match the
+  baseline **exactly**.  A drift means the encoder's output changed — the
+  same class of regression the golden fixtures guard, caught here for the
+  bench corpus.
+* **Throughput** (``comp_gbps`` / ``decomp_gbps``) — machine-dependent:
+  gated with a slack factor (current ≥ baseline / slack).  The default
+  slack is generous because CI runners are noisy and heterogeneous; it
+  still catches order-of-magnitude cliffs (an accidentally-serialized
+  pool, an interpret-mode kernel on the host path, a quadratic probe).
+  Rows whose baseline throughput is null/0 are skipped, as are device
+  rows' timings (interpret-mode artifacts, flagged ``parity`` rows keep
+  only their ratio check).
+
+``--update-baseline`` copies the current results over the baseline —
+run it (and commit the diff) when a deliberate change shifts the numbers.
+
+Exit status: 0 = within gate, 1 = regression, 2 = bad invocation/files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_CURRENT = os.path.join(REPO, "BENCH_table3_smoke.json")
+DEFAULT_BASELINE = os.path.join(REPO, "benchmarks", "baselines", "table3_smoke.json")
+DEFAULT_SLACK = 4.0
+
+
+def _key(row: dict) -> tuple:
+    return (row.get("model"), row.get("method"))
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def compare(current: dict, baseline: dict, slack: float) -> list:
+    """Return a list of human-readable regression strings (empty ⇒ pass)."""
+    problems = []
+    cur_rows = {_key(r): r for r in current.get("rows", [])}
+    base_rows = {_key(r): r for r in baseline.get("rows", [])}
+
+    missing = sorted(set(base_rows) - set(cur_rows))
+    for k in missing:
+        problems.append(f"row missing from current results: {k[0]} / {k[1]}")
+    extra = sorted(set(cur_rows) - set(base_rows))
+    for k in extra:
+        # New rows are not a regression, but flag them so the baseline gets
+        # refreshed deliberately (--update-baseline) instead of rotting.
+        print(f"note: new row not in baseline (update it): {k[0]} / {k[1]}")
+
+    for k in sorted(set(cur_rows) & set(base_rows)):
+        cur, base = cur_rows[k], base_rows[k]
+        label = f"{k[0]} / {k[1]}"
+        if cur.get("comp_pct") != base.get("comp_pct"):
+            problems.append(
+                f"{label}: ratio changed {base.get('comp_pct')} -> "
+                f"{cur.get('comp_pct')} (must match exactly: blobs are "
+                f"deterministic)"
+            )
+        if "interpret-mode" in (base.get("note") or ""):
+            continue                     # device-row timings are artifacts
+        for field in ("comp_gbps", "decomp_gbps"):
+            b, c = base.get(field), cur.get(field)
+            if not b:                    # baseline null / 0: unmeasured row
+                continue
+            if not c:
+                # A falsy *current* value against a measured baseline IS the
+                # regression (rounded-to-zero throughput = a >1000x cliff).
+                problems.append(
+                    f"{label}: {field} missing/zero in current results "
+                    f"(baseline {b:.3f} GB/s)"
+                )
+            elif c < b / slack:
+                problems.append(
+                    f"{label}: {field} {c:.3f} GB/s < baseline {b:.3f} / "
+                    f"slack {slack:g} = {b / slack:.3f}"
+                )
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default=DEFAULT_CURRENT,
+                    help="fresh bench JSON written by scripts/ci.sh")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="checked-in baseline JSON")
+    ap.add_argument("--slack", type=float,
+                    default=float(os.environ.get("BENCH_SLACK", DEFAULT_SLACK)),
+                    help="throughput slack factor (env BENCH_SLACK overrides "
+                         "the default, flag overrides both)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="copy current results over the baseline and exit")
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.current):
+        print(f"error: current bench results not found: {args.current}")
+        return 2
+    if args.update_baseline:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline}")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(
+            f"error: baseline not found: {args.baseline}\n"
+            f"seed it with: python scripts/check_bench.py --update-baseline"
+        )
+        return 2
+
+    current, baseline = _load(args.current), _load(args.baseline)
+    problems = compare(current, baseline, args.slack)
+    if problems:
+        print("BENCH REGRESSION:")
+        for p in problems:
+            print(f"  - {p}")
+        print(
+            "If this shift is deliberate, refresh with:\n"
+            "    python scripts/check_bench.py --update-baseline   # then commit"
+        )
+        return 1
+    n = len(current.get("rows", []))
+    print(f"bench gate OK: {n} rows, ratios exact, throughput within "
+          f"{args.slack:g}x slack")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,8 +2,21 @@
 # Tier-1 verification (see ROADMAP.md). Extra pytest args pass through:
 #   scripts/ci.sh -k engine          # extra filters compose with the split
 #   scripts/ci.sh -m "not slow"      # caller-supplied -m replaces the split
+#
+# ZIPNN_CI_SUITE selects which half runs (the GitHub Actions matrix splits
+# the fast and slow suites into separate jobs — see .github/workflows/ci.yml):
+#   fast  pytest -m "not slow" + parity smoke + fixture-staleness check +
+#         bench smoke + bench-regression gate
+#   slow  pytest -m "slow" only (the heavyweight fuzz/property sweeps)
+#   all   both, fast first (default — the local pre-push check)
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+SUITE="${ZIPNN_CI_SUITE:-all}"
+case "$SUITE" in
+  fast|slow|all) ;;
+  *) echo "error: ZIPNN_CI_SUITE must be fast|slow|all (got '$SUITE')" >&2; exit 2 ;;
+esac
 
 # Fast suite first (fail fast on logic errors), then the slow split: the
 # heavyweight fuzz/property sweeps (dense corruption flips, the full
@@ -14,17 +27,36 @@ cd "$(dirname "$0")/.."
 if [[ " $* " == *" -m"* ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 else
-  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q -m "not slow" "$@"
-  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "slow" "$@"
+  if [[ "$SUITE" != "slow" ]]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q -m "not slow" "$@"
+  fi
+  if [[ "$SUITE" != "fast" ]]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -q -m "slow" "$@"
+  fi
 fi
 
+if [[ "$SUITE" == "slow" ]]; then
+  exit 0
+fi
+
+# Fixture-staleness gate: regenerate the golden fixtures in memory and
+# byte-compare against the checked-in blobs, so encoder drift is caught at
+# PR time with a named diff instead of a downstream golden-test failure.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/fixtures/generate_fixtures.py --check
+
 # Decode-backend parity smoke: host vs device × threads 1 vs 4 through the
-# shared harness (tests/parity.py), including the golden-blob fixtures.
+# shared harness (tests/parity.py), including the golden-blob fixtures and
+# the device entropy stage (fused Huffman bit-pack) on the encode side.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 
 # Fast host/device backend parity smoke: small corpus through the Table 3
-# sweep; asserts device blobs byte-identical to host blobs AND device
-# decode bit-identical to the raw bytes (interpret mode on CPU-only hosts)
-# and writes the result JSON.
+# sweep; asserts device blobs byte-identical to host blobs (including the
+# full-device plane+entropy path) AND device decode bit-identical to the
+# raw bytes (interpret mode on CPU-only hosts) and writes the result JSON.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
     --backend both --n 120000 --json BENCH_table3_smoke.json
+
+# Bench-regression gate: ratios must match the checked-in baseline exactly
+# (blobs are deterministic); throughput within a slack factor (BENCH_SLACK
+# env overrides).  Refresh deliberately with --update-baseline.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python scripts/check_bench.py

@@ -71,17 +71,20 @@ def simulate_transfer(
     config: zipnn.ZipNNConfig = zipnn.DEFAULT,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> TransferReport:
     """Measure one hub transfer.  ``threads`` fans the codec's (plane,
     chunk) work items across the engine pool — the hub-scale serving knob
     (codec time scales down with cores, wire time is fixed); ``backend``
     selects both the plane-producer path on upload and the plane-consumer
     path on download (host numpy vs fused device dispatch, bytes
-    identical)."""
+    identical); ``entropy_backend`` overrides just the upload's Huffman
+    bit-pack stage (see core/device_entropy.py — mixed mode)."""
     bw = CHANNELS[channel] * 1e6
     t0 = time.perf_counter()
     blob = zipnn.compress_bytes(
-        data, dtype_name, config, threads=threads, backend=backend
+        data, dtype_name, config, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
     )
     t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
@@ -150,6 +153,7 @@ def simulate_file_transfer(
     window_bytes: Optional[int] = None,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> TransferReport:
     """Bounded-memory variant of :func:`simulate_transfer` for checkpoints
     larger than RAM: streams the file through the engine's windowed
@@ -173,6 +177,7 @@ def simulate_file_transfer(
         raw_bytes, comp_bytes = engine.compress_file(
             path, comp_path, dtype_name, config,
             window_bytes=window, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
         )
         t_comp = time.perf_counter() - t0
         t0 = time.perf_counter()

@@ -48,9 +48,14 @@ class CheckpointConfig:
     threads: int = 0
     # Plane-producer backend for the compression front half: 'host' |
     # 'device' | 'auto' (see core/device_plane.py).  'device' fuses
-    # rotate+byte-group+probe into one Pallas dispatch per save batch;
+    # rotate+byte-group+probe into one Pallas dispatch per save batch AND
+    # routes the entropy stage through the fused Huffman bit-pack dispatch
+    # (core/device_entropy.py, canonical 'huffman' coder only);
     # checkpoint bytes are identical for every setting.
     backend: str = "host"
+    # Entropy-stage override for mixed mode (None follows `backend`):
+    # 'host' | 'device' | 'auto' — see core/device_entropy.py.
+    entropy_backend: Optional[str] = None
     zipnn: zipnn.ZipNNConfig = dataclasses.field(default_factory=zipnn.ZipNNConfig)
 
     def __post_init__(self) -> None:
@@ -58,6 +63,10 @@ class CheckpointConfig:
             self.zipnn = dataclasses.replace(self.zipnn, threads=self.threads)
         if self.backend != "host" and self.zipnn.plane_backend == "host":
             self.zipnn = dataclasses.replace(self.zipnn, plane_backend=self.backend)
+        if self.entropy_backend is not None and self.zipnn.entropy_backend is None:
+            self.zipnn = dataclasses.replace(
+                self.zipnn, entropy_backend=self.entropy_backend
+            )
 
 
 def _flatten(tree: PyTree) -> Dict[str, np.ndarray]:

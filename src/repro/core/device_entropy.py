@@ -1,0 +1,247 @@
+"""Device entropy-stage backend: fused Huffman bit-packing on accelerator.
+
+PR 2/3 moved the compression *front half* (rotate + byte-group + probe) and
+the decompression back half on device; the Huffman encode loop stayed the
+last GIL-bound host pass on the compress path.  This module closes it:
+
+* the probe histograms (host ``hist256`` or the device plane-producer's
+  :class:`~repro.core.codec.ProbeStats`) feed the **canonical table build on
+  host** — table construction is a 256-entry package-merge, microseconds,
+  and keeping it host-side preserves the canonical-code contract that makes
+  blobs testable;
+* every (plane, chunk) work item the codec planned as ``HUFF`` then packs
+  symbols→bits in **one fused Pallas dispatch**
+  (:func:`repro.kernels.bitpack.bitpack_encode_chunks_multi` — per-chunk
+  table selection, so all planes of a tensor ride one launch) followed by a
+  **single device→host transfer** of packed words + true bit counts;
+* the host does only container framing and the expansion guard: chunks
+  whose packed size would reach their raw size are stored raw by
+  :meth:`~repro.core.codec.PlaneCodec.finalize`, exactly as on the host
+  path, so the metadata map is unchanged.
+
+Output blobs are **byte-identical** to the host encoder for every thread
+count and plane backend: the kernel packs MSB-first canonical codes with
+per-chunk byte alignment — the same bitstream ``huffman.encode_chunks``
+emits — and the method plan (probe + probe-skip) runs through the one
+shared :meth:`~repro.core.codec.PlaneCodec.plan` implementation.
+
+Backend selection mirrors :mod:`.device_plane`:
+
+* ``"host"``   — the numpy/vectorized host encoder (default);
+* ``"device"`` — the fused bit-pack dispatch whenever supported (canonical
+  ``huffman`` coder, 4-byte-aligned chunks); silent host fallback
+  otherwise, so the knob is always safe to set;
+* ``"auto"``   — device only for accelerator-resident leaves.
+
+Support envelope: the codec's ``backend == "huffman"`` coder only — the
+``hufflib`` (zlib) coder's DEFLATE bitstream has no device formulation —
+with ``chunk_bytes % 4 == 0`` (the uint32 word reduce).  ``ZERO`` /
+``STORE`` / ``ZLIB`` chunks and the §4.2 delta LZ path stay host work
+items, as does everything on fallback.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import bitlayout, codec
+
+__all__ = [
+    "BACKENDS",
+    "is_available",
+    "supports",
+    "resolve",
+    "encode_planes",
+]
+
+BACKENDS = ("host", "device", "auto")
+
+# One fused dispatch is capped so symbols + packed words (2× the HUFF chunk
+# bytes) stay comfortably in device memory; larger jobs split into several
+# launches (payload bytes are per-chunk, so splitting never changes them).
+MAX_BATCH_BYTES = 256 << 20
+
+
+def is_available() -> bool:
+    """True when jax (and therefore the Pallas kernels) can be imported."""
+    from . import device_plane
+
+    return device_plane.is_available()
+
+
+def supports(layout: Optional[bitlayout.BitLayout], params: codec.CodecParams) -> bool:
+    """Can the fused bit-pack path reproduce the host encoder's bytes?
+
+    Requires the canonical ``huffman`` coder (``hufflib`` emits a DEFLATE
+    stream we do not reproduce on device) and chunks that are whole uint32
+    words.
+    """
+    if params.backend != "huffman":
+        return False
+    if params.chunk_bytes % 4 != 0:
+        return False
+    return is_available()
+
+
+def resolve(
+    requested: Optional[str],
+    layout: Optional[bitlayout.BitLayout],
+    params: codec.CodecParams,
+    leaf=None,
+) -> str:
+    """Collapse a backend request to the concrete path: 'host' or 'device'."""
+    if requested is None or requested == "host":
+        return "host"
+    if requested == "device":
+        return "device" if supports(layout, params) else "host"
+    if requested == "auto":
+        from . import device_plane
+
+        return (
+            "device"
+            if supports(layout, params) and device_plane._on_accelerator(leaf)
+            else "host"
+        )
+    raise ValueError(
+        f"unknown entropy backend {requested!r}; expected one of {BACKENDS}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused encode
+# ---------------------------------------------------------------------------
+
+PlaneResult = Tuple[List[codec.ChunkEntry], List[bytes], Optional[bytes]]
+
+
+def _pack_jobs(
+    planes: Sequence[np.ndarray],
+    jobs: Sequence[Tuple[int, int, int]],
+    len_tables: np.ndarray,
+    code_tables: np.ndarray,
+    chunk_bytes: int,
+) -> List[bytes]:
+    """Run one fused bit-pack dispatch over ``jobs`` and slice payloads.
+
+    ``jobs`` is ``(plane_idx, chunk_idx, size)`` per HUFF chunk; the final
+    partial chunk (``size < chunk_bytes``) is zero-padded on the symbol side
+    and its pad bits are subtracted/masked on the host side — byte-identical
+    to encoding exactly ``size`` symbols.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import bitpack
+
+    c = len(jobs)
+    syms = np.zeros(c * chunk_bytes, dtype=np.uint8)
+    pids = np.empty(c, dtype=np.int32)
+    for k, (p, ch, size) in enumerate(jobs):
+        start = ch * chunk_bytes
+        syms[k * chunk_bytes : k * chunk_bytes + size] = planes[p][start : start + size]
+        pids[k] = p
+    words, nbits = bitpack.bitpack_encode_chunks_multi(
+        jnp.asarray(syms),
+        jnp.asarray(pids),
+        jnp.asarray(len_tables),
+        jnp.asarray(code_tables),
+        chunk_syms=chunk_bytes,
+        interpret=jax.default_backend() != "tpu",
+    )
+    # The one device→host transfer: packed words + true bit counts together.
+    words_h, nbits_h = jax.device_get((words, nbits))
+    # uint32 words hold bit j of the chunk at word bit 31-j: big-endian byte
+    # order recovers exactly the np.packbits stream the host encoder emits.
+    stream = np.ascontiguousarray(words_h).byteswap().view(np.uint8).reshape(-1)
+
+    out: List[bytes] = []
+    for k, (p, ch, size) in enumerate(jobs):
+        pad = chunk_bytes - size
+        true_bits = int(nbits_h[k]) - pad * int(len_tables[p, 0])
+        nbytes = (true_bits + 7) >> 3
+        if nbytes > chunk_bytes:
+            # Expanded past the kernel's raw-size capacity: bits were
+            # truncated on device, but finalize() stores this chunk raw
+            # (len >= raw_len) — only the payload *length* matters here.
+            out.append(bytes(nbytes))
+            continue
+        blob = bytearray(stream[k * chunk_bytes : k * chunk_bytes + nbytes])
+        slack = nbytes * 8 - true_bits
+        if slack and nbytes:
+            blob[-1] &= (0xFF << slack) & 0xFF  # zero pad-symbol bits
+        out.append(bytes(blob))
+    return out
+
+
+def encode_planes(
+    planes: Sequence[np.ndarray],
+    probes: Sequence[Optional[codec.ProbeStats]],
+    params: codec.CodecParams,
+    pool=None,
+) -> Tuple[List[List[codec.ChunkEntry]], List[List[bytes]], List[Optional[bytes]]]:
+    """Device-backed equivalent of the per-plane host compress loop.
+
+    Pass 1 (plan: probe + probe-skip + table build) runs host-side through
+    the shared :meth:`~repro.core.codec.PlaneCodec.plan`; every planned
+    ``HUFF`` chunk across *all* planes then packs in one fused device
+    dispatch (split only at :data:`MAX_BATCH_BYTES`), while ``ZERO`` /
+    ``STORE`` / ``ZLIB`` chunks encode as host work items on ``pool``.
+    Pass 3 (expansion guard + metadata map) is the shared ``finalize``.
+
+    Returns per-plane ``(entries, payloads, table_blob)`` lists matching
+    :func:`repro.core.codec.compress_plane` byte-for-byte.
+    """
+    codecs = [codec.PlaneCodec(params) for _ in planes]
+    methods_all: List[List[int]] = []
+    for pc, plane, probe in zip(codecs, planes, probes):
+        methods_all.append(pc.plan(plane, pool=pool, probe=probe))
+
+    cb = params.chunk_bytes
+    jobs: List[Tuple[int, int, int]] = []
+    for p, (plane, methods) in enumerate(zip(planes, methods_all)):
+        for ch, m in enumerate(methods):
+            if m == codec.Method.HUFF:
+                jobs.append((p, ch, min(cb, plane.size - ch * cb)))
+
+    huff_payloads: dict = {}
+    if jobs:
+        len_tables = np.stack(
+            [np.asarray(pc.table, dtype=np.int32) for pc in codecs]
+        )
+        code_tables = np.stack(
+            [np.asarray(pc.codes, dtype=np.int32) for pc in codecs]
+        )
+        per_launch = max(1, MAX_BATCH_BYTES // (2 * cb))
+        for lo in range(0, len(jobs), per_launch):
+            batch = jobs[lo : lo + per_launch]
+            for (p, ch, _), blob in zip(
+                batch, _pack_jobs(planes, batch, len_tables, code_tables, cb)
+            ):
+                huff_payloads[(p, ch)] = blob
+
+    entries_all: List[List[codec.ChunkEntry]] = []
+    payloads_all: List[List[bytes]] = []
+    tables_all: List[Optional[bytes]] = []
+    for p, (pc, plane, methods) in enumerate(zip(codecs, planes, methods_all)):
+        other = [ch for ch in range(len(methods)) if methods[ch] != codec.Method.HUFF]
+        other_blobs = codec._fan_out(
+            pool,
+            len(other),
+            lambda ids, plane=plane, methods=methods, other=other, pc=pc: (
+                pc.encode_ids(plane, methods, [other[i] for i in ids])
+            ),
+        )
+        payloads: List[bytes] = [b""] * len(methods)
+        for ch, blob in zip(other, other_blobs):
+            payloads[ch] = blob
+        for ch, m in enumerate(methods):
+            if m == codec.Method.HUFF:
+                payloads[ch] = huff_payloads[(p, ch)]
+        entries = pc.finalize(plane, methods, payloads)
+        needs_table = any(e.method == codec.Method.HUFF for e in entries)
+        entries_all.append(entries)
+        payloads_all.append(payloads)
+        tables_all.append(pc.table_blob() if needs_table else None)
+    return entries_all, payloads_all, tables_all

@@ -58,6 +58,13 @@ byte-group + probe) has two interchangeable backends, chosen by the
   combinations silently fall back to the host path;
 * ``"auto"`` — device only for accelerator-resident ``jax.Array`` leaves.
 
+``backend="device"`` also routes the **entropy stage** through the fused
+Huffman bit-pack dispatch (:mod:`repro.core.device_entropy`) when the
+codec's canonical ``huffman`` coder is selected; the ``entropy_backend=``
+knob on :class:`CompressWriter` / :func:`compress_file` (and every
+``zipnn`` compression entry point) overrides just that stage for mixed
+mode.
+
 The same knob covers the decode work items: :class:`DecompressReader` /
 :func:`decompress_file` pass ``backend=`` through to
 ``zipnn.decompress_bytes``, whose back half (un-byte-group + inverse
@@ -183,12 +190,14 @@ class CompressWriter:
         window_bytes: int = DEFAULT_WINDOW,
         threads: Optional[int] = None,
         backend: Optional[str] = None,
+        entropy_backend: Optional[str] = None,
     ):
         from . import bitlayout, zipnn   # lazy: zipnn imports this module
 
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if threads is None else threads
         self._backend = backend
+        self._entropy_backend = entropy_backend
         self._dtype_name = dtype_name
         itemsize = bitlayout.layout_for(dtype_name).itemsize
         self._window = max(window_bytes - window_bytes % itemsize, itemsize)
@@ -226,6 +235,7 @@ class CompressWriter:
         return zipnn.compress_bytes(
             raw, self._dtype_name, self._config,
             threads=self._threads, backend=self._backend,
+            entropy_backend=self._entropy_backend,
         )
 
     def _submit(self, raw: bytes) -> None:
@@ -509,6 +519,7 @@ def compress_file(
     window_bytes: int = DEFAULT_WINDOW,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> Tuple[int, int]:
     """Stream-compress ``src`` into a ``ZNS1`` container at ``dst``.
 
@@ -522,6 +533,7 @@ def compress_file(
         with CompressWriter(
             dst, dtype_name, config,
             window_bytes=window_bytes, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
         ) as w:
             while True:
                 data = fin.read(w._window)

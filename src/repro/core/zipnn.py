@@ -29,6 +29,16 @@ probe stats (see :mod:`.device_plane`), ``"auto"`` picks device only for
 accelerator-resident leaves.  Blobs are byte-identical across backends ×
 thread counts — both knobs change wall-clock only.
 
+``backend="device"`` now covers the **entropy stage** too: (plane, chunk)
+work items planned as ``HUFF`` bit-pack on device in one fused dispatch
+(see :mod:`.device_entropy`) instead of the vectorized host encoder, with
+the canonical table still built on host and the expansion guard / container
+framing unchanged.  The ``entropy_backend=`` override (also a
+``ZipNNConfig`` field) decouples the two stages for mixed mode — e.g.
+``backend="host", entropy_backend="device"`` probes on host but packs bits
+on device.  The device entropy stage engages only for the canonical
+``huffman`` coder; the ``hufflib`` (zlib) coder silently stays host-side.
+
 Every *decompression* entry point takes the same ``backend=`` knob for the
 decode back half (see :mod:`.device_unplane`): after the entropy stage
 rebuilds the byte-group planes, ``"device"`` uploads them once and runs
@@ -97,6 +107,13 @@ class ZipNNConfig:
     # accelerator-resident jax arrays).  Blob bytes are identical for every
     # setting — see core/device_plane.py.
     plane_backend: str = "host"
+    # Entropy-stage backend: None follows plane_backend; 'host' forces the
+    # vectorized host Huffman encoder; 'device' bit-packs HUFF chunks as one
+    # fused Pallas dispatch (canonical 'huffman' coder only — 'hufflib'
+    # always encodes host-side); 'auto' device only for accelerator-resident
+    # leaves.  Blob bytes are identical for every setting — see
+    # core/device_entropy.py.
+    entropy_backend: Optional[str] = None
 
     def plane_params(self, itemsize: int, delta: bool = False) -> codec.CodecParams:
         return codec.CodecParams(
@@ -145,6 +162,33 @@ def _resolve_backend(
     return device_plane.resolve(requested, layout, params, leaf=leaf)
 
 
+def _resolve_entropy_backend(
+    entropy_backend: Optional[str],
+    backend: Optional[str],
+    config: ZipNNConfig,
+    layout: bitlayout.BitLayout,
+    params: codec.CodecParams,
+    leaf: Any = None,
+) -> str:
+    """Collapse the entropy-backend knob to 'host' or 'device' for one leaf.
+
+    Precedence: explicit ``entropy_backend=`` argument, then the config's
+    ``entropy_backend`` field, then the plane ``backend`` request — so
+    ``backend="device"`` means plane *and* entropy on device unless the
+    entropy knob overrides it (mixed mode).
+    """
+    requested = entropy_backend
+    if requested is None:
+        requested = config.entropy_backend
+    if requested is None:
+        requested = config.plane_backend if backend is None else backend
+    if requested == "host":
+        return "host"
+    from . import device_entropy  # lazy: pulls in jax/Pallas
+
+    return device_entropy.resolve(requested, layout, params, leaf=leaf)
+
+
 def _entropy_stage(
     planes: Sequence[np.ndarray],
     probes: Sequence[Optional[codec.ProbeStats]],
@@ -154,19 +198,31 @@ def _entropy_stage(
     params: codec.CodecParams,
     pool,
     delta: bool,
+    entropy: str = "host",
 ) -> bytes:
     """Shared back half of every compression path: (plane, chunk) entropy
     work items + container packing.  ``planes`` may come from the host
     byte-split or the device plane producer; ``probes`` carry the device
-    path's precomputed per-chunk statistics (None ⇒ host probe)."""
+    path's precomputed per-chunk statistics (None ⇒ host probe).
+
+    ``entropy="device"`` routes the planned HUFF chunks of all planes
+    through one fused bit-pack dispatch (:mod:`.device_entropy`); blobs are
+    byte-identical either way."""
     tables: List[Optional[bytes]] = []
     entries: List[List[codec.ChunkEntry]] = []
     payloads: List[List[bytes]] = []
-    for plane, probe in zip(planes, probes):
-        e, p, t = codec.compress_plane(plane, params, pool=pool, probe=probe)
-        entries.append(e)
-        payloads.append(p)
-        tables.append(t)
+    if entropy == "device" and planes:
+        from . import device_entropy
+
+        entries, payloads, tables = device_entropy.encode_planes(
+            planes, probes, params, pool=pool
+        )
+    else:
+        for plane, probe in zip(planes, probes):
+            e, p, t = codec.compress_plane(plane, params, pool=pool, probe=probe)
+            entries.append(e)
+            payloads.append(p)
+            tables.append(t)
     blob = container.pack_stream(
         layout.name, body_bytes, params.chunk_bytes, tables, entries, payloads,
         delta=delta,
@@ -184,6 +240,7 @@ def compress_bytes(
     delta: bool = False,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> bytes:
     """Compress a raw little-endian byte stream interpreted as ``dtype_name``."""
     buf = np.frombuffer(raw, dtype=np.uint8) if isinstance(raw, (bytes, memoryview, bytearray)) else np.ascontiguousarray(raw, dtype=np.uint8)
@@ -199,8 +256,14 @@ def compress_bytes(
     else:
         planes = bitlayout.to_planes(body, layout, pool=pool)
         probes = [None] * len(planes)
+    entropy = (
+        _resolve_entropy_backend(entropy_backend, backend, config, layout, params)
+        if body.size
+        else "host"
+    )
     return _entropy_stage(
-        planes, probes, layout, body.size, rem, params, pool, delta
+        planes, probes, layout, body.size, rem, params, pool, delta,
+        entropy=entropy,
     )
 
 
@@ -303,6 +366,7 @@ def compress_array(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> CompressedTensor:
     layout = _leaf_layout(arr)
     if layout is not None and np.size(arr):
@@ -315,16 +379,25 @@ def compress_array(
             planes, probes = device_plane.produce_planes(arr, layout, params)
             pool = engine.get_pool(config.threads if threads is None else threads)
             n_bytes = int(np.size(arr)) * layout.itemsize
+            entropy = _resolve_entropy_backend(
+                entropy_backend, backend, config, layout, params, leaf=arr
+            )
             blob = _entropy_stage(
-                planes, probes, layout, n_bytes, None, params, pool, False
+                planes, probes, layout, n_bytes, None, params, pool, False,
+                entropy=entropy,
             )
             name = arr.dtype.name
             return CompressedTensor(blob, name, tuple(np.shape(arr)))
+        # Entropy may still go device (mixed mode): resolve it against the
+        # leaf's accelerator residence before the plane request collapses.
+        entropy_backend = _resolve_entropy_backend(
+            entropy_backend, backend, config, layout, params, leaf=arr
+        )
         backend = "host"             # resolved once; don't re-resolve below
     a = _to_numpy(arr)
     blob = compress_bytes(
         a.reshape(-1).view(np.uint8), a.dtype.name, config,
-        threads=threads, backend=backend,
+        threads=threads, backend=backend, entropy_backend=entropy_backend,
     )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
@@ -352,6 +425,7 @@ def compress_pytree(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> Dict[str, Any]:
     """Compress every leaf of a pytree. Returns a manifest dict.
 
@@ -390,14 +464,26 @@ def compress_pytree(
             )
             for i, (planes, probes) in zip(idxs, produced):
                 n_bytes = int(np.size(leaves[i])) * layout.itemsize
+                entropy = _resolve_entropy_backend(
+                    entropy_backend, backend, config, layout, params,
+                    leaf=leaves[i],
+                )
                 blob = _entropy_stage(
-                    planes, probes, layout, n_bytes, None, params, pool, False
+                    planes, probes, layout, n_bytes, None, params, pool, False,
+                    entropy=entropy,
                 )
                 comp[i] = CompressedTensor(blob, name, tuple(np.shape(leaves[i])))
 
     for i, leaf in enumerate(leaves):
         if comp[i] is None:
-            comp[i] = compress_array(leaf, config, threads=threads, backend="host")
+            # The plane path is host for these leaves, but a 'device'/'auto'
+            # request still covers their entropy stage (mixed mode).
+            comp[i] = compress_array(
+                leaf, config, threads=threads, backend="host",
+                entropy_backend=(
+                    entropy_backend if entropy_backend is not None else backend
+                ),
+            )
     return {
         "treedef": treedef,
         "leaves": comp,
@@ -496,6 +582,7 @@ def delta_compress(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> CompressedTensor:
     """XOR-delta two same-shape tensors and compress the delta stream.
 
@@ -523,10 +610,17 @@ def delta_compress(
             )
             pool = engine.get_pool(config.threads if threads is None else threads)
             n_bytes = int(np.size(new)) * layout.itemsize
+            entropy = _resolve_entropy_backend(
+                entropy_backend, backend, config, layout, params, leaf=new
+            )
             blob = _entropy_stage(
-                planes, probes, layout, n_bytes, None, params, pool, True
+                planes, probes, layout, n_bytes, None, params, pool, True,
+                entropy=entropy,
             )
             return CompressedTensor(blob, new.dtype.name, tuple(np.shape(new)))
+        entropy_backend = _resolve_entropy_backend(
+            entropy_backend, backend, config, layout, params, leaf=new
+        )
         backend = "host"             # resolved once; don't re-resolve below
     a = _to_numpy(new)
     b = _to_numpy(base)
@@ -534,7 +628,8 @@ def delta_compress(
         raise ValueError("delta requires matching shape/dtype")
     x = np.bitwise_xor(a.reshape(-1).view(np.uint8), b.reshape(-1).view(np.uint8))
     blob = compress_bytes(
-        x, a.dtype.name, config, delta=True, threads=threads, backend=backend
+        x, a.dtype.name, config, delta=True, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
     )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
@@ -546,6 +641,7 @@ def delta_compress_batched(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> List[CompressedTensor]:
     """Delta-compress many ``(new, base)`` pairs; returns blobs in order.
 
@@ -587,14 +683,24 @@ def delta_compress_batched(
             )
             for i, (planes, probes) in zip(idxs, produced):
                 n_bytes = int(np.size(news[i])) * layout.itemsize
+                entropy = _resolve_entropy_backend(
+                    entropy_backend, backend, config, layout, params,
+                    leaf=news[i],
+                )
                 blob = _entropy_stage(
-                    planes, probes, layout, n_bytes, None, params, pool, True
+                    planes, probes, layout, n_bytes, None, params, pool, True,
+                    entropy=entropy,
                 )
                 out[i] = CompressedTensor(blob, name, tuple(np.shape(news[i])))
 
     for i, (a, b) in enumerate(zip(news, bases)):
         if out[i] is None:
-            out[i] = delta_compress(a, b, config, threads=threads, backend="host")
+            out[i] = delta_compress(
+                a, b, config, threads=threads, backend="host",
+                entropy_backend=(
+                    entropy_backend if entropy_backend is not None else backend
+                ),
+            )
     return out
 
 

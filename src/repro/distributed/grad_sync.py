@@ -42,9 +42,12 @@ class GradSync:
 
     ``threads`` fans the codec's (plane, chunk) work items across the
     engine's shared pool; ``backend`` selects the plane-producer path
-    ('host' | 'device' | 'auto' — see ``core/device_plane.py``).  Gradient
-    payloads reuse the exact same codec work items as checkpoints, so both
-    knobs apply unchanged and wire bytes are identical for every setting.
+    ('host' | 'device' | 'auto' — see ``core/device_plane.py``) and, with
+    the canonical 'huffman' coder, the fused device Huffman bit-pack stage
+    (``core/device_entropy.py``); ``entropy_backend`` overrides just that
+    stage (mixed mode).  Gradient payloads reuse the exact same codec work
+    items as checkpoints, so the knobs apply unchanged and wire bytes are
+    identical for every setting.
     """
 
     def __init__(
@@ -53,10 +56,12 @@ class GradSync:
         *,
         threads: int | None = None,
         backend: str | None = None,
+        entropy_backend: str | None = None,
     ):
         self.config = config
         self.threads = threads
         self.backend = backend
+        self.entropy_backend = entropy_backend
 
     def pack(self, grads: PyTree) -> Tuple[Dict[str, Any], WireStats]:
         import time
@@ -69,7 +74,8 @@ class GradSync:
         be = self.backend if self.backend is not None else self.config.plane_backend
         tree = jax.device_get(grads) if be == "host" else grads
         manifest = zipnn.compress_pytree(
-            tree, self.config, threads=self.threads, backend=self.backend
+            tree, self.config, threads=self.threads, backend=self.backend,
+            entropy_backend=self.entropy_backend,
         )
         dt = time.perf_counter() - t0
         return manifest, WireStats(manifest["raw_bytes"], manifest["comp_bytes"], dt)

@@ -30,11 +30,11 @@ from jax.experimental import pallas as pl
 MAXL = 15
 
 
-def _bitpack_kernel(syms_ref, len_ref, code_ref, words_ref, nbits_ref):
-    syms = syms_ref[...].reshape(-1).astype(jnp.int32)
+def _pack_block(syms, lens_tab, codes_tab, words_ref, nbits_ref):
+    """Shared kernel body: pack one chunk's symbols under one table."""
     n = syms.shape[0]
-    lens = len_ref[...][syms]
-    codes = code_ref[...][syms]
+    lens = lens_tab[syms]
+    codes = codes_tab[syms]
     ends = jnp.cumsum(lens)
     nbits = ends[n - 1]
     starts = ends - lens
@@ -55,6 +55,23 @@ def _bitpack_kernel(syms_ref, len_ref, code_ref, words_ref, nbits_ref):
     lo = jnp.sum(groups[:, 16:] * pow16[None, :], axis=1)
     words_ref[...] = ((hi.astype(jnp.uint32) << 16) | lo.astype(jnp.uint32))
     nbits_ref[0] = nbits
+
+
+def _bitpack_kernel(syms_ref, len_ref, code_ref, words_ref, nbits_ref):
+    syms = syms_ref[...].reshape(-1).astype(jnp.int32)
+    _pack_block(syms, len_ref[...], code_ref[...], words_ref, nbits_ref)
+
+
+def _bitpack_multi_kernel(pid_ref, len_ref, code_ref, syms_ref, words_ref, nbits_ref):
+    """Per-chunk table selection: chunk ``i`` packs under table row
+    ``pid_ref[0]`` of the stacked ``(P, 256)`` canonical tables — the
+    multi-plane form (every plane of a tensor has its own table, but all
+    planes' chunks ride ONE dispatch)."""
+    pid = pid_ref[0]
+    lens_tab = jax.lax.dynamic_index_in_dim(len_ref[...], pid, axis=0, keepdims=False)
+    codes_tab = jax.lax.dynamic_index_in_dim(code_ref[...], pid, axis=0, keepdims=False)
+    syms = syms_ref[...].reshape(-1).astype(jnp.int32)
+    _pack_block(syms, lens_tab, codes_tab, words_ref, nbits_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk_syms", "interpret"))
@@ -92,4 +109,54 @@ def bitpack_encode_chunks(
         ],
         interpret=interpret,
     )(syms, len_table.astype(jnp.int32), code_table.astype(jnp.int32))
+    return words.reshape(c, chunk_syms // 4), nbits
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_syms", "interpret"))
+def bitpack_encode_chunks_multi(
+    syms: jax.Array,
+    plane_ids: jax.Array,
+    len_tables: jax.Array,
+    code_tables: jax.Array,
+    *,
+    chunk_syms: int = 1 << 13,
+    interpret: bool = True,
+):
+    """Multi-table variant: chunk ``i`` packs under table ``plane_ids[i]``.
+
+    ``syms`` is uint8[C*chunk_syms] (chunks from *different planes*
+    concatenated), ``plane_ids`` int32[C] selects a row of the stacked
+    ``(P, 256)`` length/code tables per chunk.  One dispatch covers every
+    (plane, chunk) Huffman work item of a tensor.  Returns
+    ``(uint32[C, chunk_syms/4], int32[C])`` like
+    :func:`bitpack_encode_chunks`.
+    """
+    n = syms.shape[0]
+    assert n % chunk_syms == 0, "pad to whole chunks on the host"
+    c = n // chunk_syms
+    p = len_tables.shape[0]
+    words, nbits = pl.pallas_call(
+        _bitpack_multi_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((p, 256), lambda i: (0, 0)),
+            pl.BlockSpec((p, 256), lambda i: (0, 0)),
+            pl.BlockSpec((chunk_syms,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk_syms // 4,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c * (chunk_syms // 4),), jnp.uint32),
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        plane_ids.astype(jnp.int32),
+        len_tables.astype(jnp.int32),
+        code_tables.astype(jnp.int32),
+        syms,
+    )
     return words.reshape(c, chunk_syms // 4), nbits

@@ -9,6 +9,11 @@ changed — bump the container version and regenerate deliberately:
 
     PYTHONPATH=src python tests/fixtures/generate_fixtures.py
 
+``--check`` regenerates every fixture **in memory** and byte-compares it
+against the checked-in files without writing anything — the CI
+fixture-staleness gate (scripts/ci.sh): encoder drift is caught at PR time
+with a named diff instead of a downstream golden-test failure.
+
 Inputs are seeded ``np.random.default_rng`` draws (stream-stable per
 NEP 19), but the raw bytes are checked in alongside the blobs so the guard
 never depends on RNG stability.
@@ -16,6 +21,7 @@ never depends on RNG stability.
 
 from __future__ import annotations
 
+import argparse
 import io
 import json
 import os
@@ -37,12 +43,13 @@ def _weights(n, npdt, seed, scale):
     return (rng.standard_normal(n) * scale).astype(npdt)
 
 
-def main() -> None:
+def build():
+    """Regenerate every fixture into memory: returns (fixtures_meta, files)."""
     fixtures = []
+    files = {}
 
     def write(name: str, data: bytes) -> str:
-        with open(os.path.join(HERE, name), "wb") as f:
-            f.write(data)
+        files[name] = data
         return name
 
     # 1. bf16 through the default hufflib coder (HUFFLIB + STORE chunks)
@@ -110,14 +117,68 @@ def main() -> None:
         "blob": write("bf16_stream.znns", sink.getvalue()),
     })
 
+    return fixtures, files
+
+
+def check() -> int:
+    """Byte-compare regenerated fixtures against the checked-in files.
+
+    Returns the number of stale/missing files (0 ⇒ fixtures are fresh).
+    """
+    fixtures, files = build()
+    stale = []
+    for name, data in files.items():
+        path = os.path.join(HERE, name)
+        if not os.path.exists(path):
+            stale.append(f"{name}: missing on disk")
+            continue
+        with open(path, "rb") as f:
+            have = f.read()
+        if have != data:
+            stale.append(
+                f"{name}: {len(have)} bytes on disk != {len(data)} regenerated"
+            )
+    meta_path = os.path.join(HERE, "meta.json")
+    want_meta = {"format": "ZNN1/ZNS1 v1", "fixtures": fixtures}
+    try:
+        with open(meta_path) as f:
+            have_meta = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        have_meta = None
+    if have_meta != want_meta:
+        stale.append("meta.json: does not match regenerated metadata")
+    if stale:
+        print("STALE fixtures (encoder output drifted from the checked-in blobs):")
+        for s in stale:
+            print(f"  - {s}")
+        print(
+            "If the format change is deliberate, regenerate with\n"
+            "    PYTHONPATH=src python tests/fixtures/generate_fixtures.py"
+        )
+    else:
+        print(f"fixtures fresh: {len(files)} files byte-identical to regeneration")
+    return len(stale)
+
+
+def main() -> None:
+    fixtures, files = build()
+    for name, data in files.items():
+        with open(os.path.join(HERE, name), "wb") as f:
+            f.write(data)
     with open(os.path.join(HERE, "meta.json"), "w") as f:
         json.dump({"format": "ZNN1/ZNS1 v1", "fixtures": fixtures}, f, indent=2)
-    total = sum(
-        os.path.getsize(os.path.join(HERE, fx[k]))
-        for fx in fixtures for k in ("raw", "blob", "base") if k in fx
-    )
+    total = sum(len(d) for d in files.values())
     print(f"wrote {len(fixtures)} fixtures ({total / 1024:.0f} KiB) to {HERE}")
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--check", action="store_true",
+        help="regenerate in memory and byte-compare against the checked-in "
+             "fixtures; exit 1 on drift (the CI staleness gate)",
+    )
+    args = ap.parse_args()
+    if args.check:
+        sys.exit(1 if check() else 0)
     main()

@@ -5,7 +5,11 @@ the CI smoke: for any blob, the decoded bytes are **bit-exact** across
 ``backend ∈ {host, device, auto} × threads ∈ {1, 4}``, equal to the host
 reference, and (for the checked-in fixtures) equal to the frozen golden
 raw bytes — while re-encoding the raw bytes reproduces the golden blob
-byte-for-byte (format stability).
+byte-for-byte (format stability).  The encode side additionally sweeps
+``entropy_backend`` (the fused device Huffman bit-pack stage,
+``core/device_entropy.py``): blobs must stay byte-identical with the
+entropy stage on device, including on the canonical-coder configs where
+it actually engages.
 
 Importable from test modules (no ``test_`` prefix, so pytest does not
 collect it as a suite) and runnable standalone as the CI parity smoke:
@@ -102,6 +106,14 @@ def assert_decode_parity(
     for be in backends:
         blob = zipnn.compress_bytes(raw, dtype_name, cfg, backend=be)
         assert blob == ref, f"encode backend {be!r} changed blob bytes [{label}]"
+        # Device entropy stage (fused Huffman bit-pack; host fallback for the
+        # hufflib coder) must never change blob bytes either.
+        blob = zipnn.compress_bytes(
+            raw, dtype_name, cfg, backend=be, entropy_backend=be
+        )
+        assert blob == ref, (
+            f"entropy backend {be!r} changed blob bytes [{label}]"
+        )
         for t in threads:
             out = zipnn.decompress_bytes(ref, cfg, threads=t, backend=be)
             assert out == raw, (
@@ -128,6 +140,10 @@ def assert_delta_parity(
         ct = zipnn.delta_compress(new, base, cfg, backend=be)
         assert ct.blob == ref.blob, (
             f"delta encode backend {be!r} changed blob bytes [{label}]"
+        )
+        ct = zipnn.delta_compress(new, base, cfg, backend=be, entropy_backend=be)
+        assert ct.blob == ref.blob, (
+            f"delta entropy backend {be!r} changed blob bytes [{label}]"
         )
         for t in threads:
             back = zipnn.delta_decompress(ref, base, cfg, threads=t, backend=be)
@@ -194,6 +210,9 @@ def sweep(
     """
     cases = 0
     cfg = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15)  # multi-chunk at test sizes
+    # Canonical-coder config: HUFF chunks, so the device entropy stage
+    # (fused bit-pack) actually engages instead of falling back.
+    cfg_huff = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15, backend="huffman")
     for dtype in dtypes:
         itemsize = np.dtype(NP_DTYPES[dtype]).itemsize
         for n in sizes:
@@ -212,6 +231,13 @@ def sweep(
                     backends=backends, threads=threads, label=label + " +tail",
                 )
                 cases += 2
+                if kind == "normal":
+                    assert_decode_parity(
+                        raw, dtype, config=cfg_huff,
+                        backends=backends, threads=threads,
+                        label=label + " huff",
+                    )
+                    cases += 1
                 if verbose:
                     print(f"  ok: {label}")
             if deltas and n:
@@ -263,6 +289,8 @@ def check_golden(
                     assert out == raw, f"{label} decode {be}×{t} != frozen raw"
             re = zipnn.compress_bytes(raw, fx["dtype"], cfg)
             assert re == blob, f"{label} re-encode != frozen blob"
+            re = zipnn.compress_bytes(raw, fx["dtype"], cfg, entropy_backend="device")
+            assert re == blob, f"{label} device-entropy re-encode != frozen blob"
         elif fx["kind"] == "delta":
             raw, base_raw, blob = rd(fx["raw"]), rd(fx["base"]), rd(fx["blob"])
             npdt = np.dtype(NP_DTYPES[fx["dtype"]])
@@ -277,6 +305,10 @@ def check_golden(
                     )
             re = zipnn.delta_compress(new, base, cfg)
             assert re.blob == blob, f"{label} re-encode != frozen blob"
+            re = zipnn.delta_compress(new, base, cfg, entropy_backend="device")
+            assert re.blob == blob, (
+                f"{label} device-entropy re-encode != frozen blob"
+            )
         elif fx["kind"] == "stream":
             raw, blob = rd(fx["raw"]), rd(fx["blob"])
             for be in backends:

@@ -1,0 +1,252 @@
+"""Device entropy-stage backend (core/device_entropy.py + kernels/bitpack.py).
+
+Contract under test: with the canonical ``huffman`` coder, blobs produced
+with ``entropy_backend="device"`` (fused Pallas bit-pack dispatch) are
+**byte-identical** to the host encoder's for every plane backend × thread
+count — including the final partial chunk, the expansion-guard raw-chunk
+path, and the §4.2 delta mix — and the ``hufflib`` coder silently falls
+back to host.
+"""
+
+import io
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import codec, device_entropy, engine, huffman, zipnn
+from parity import as_bytes, make_array
+
+HUFF_CFG = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15, backend="huffman")
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: fused bit-pack vs the vectorized host encoder
+# ---------------------------------------------------------------------------
+
+def _skewed_plane(n: int, seed: int) -> np.ndarray:
+    """Exponent-plane-like bytes: a handful of hot values (compressible)."""
+    rng = np.random.default_rng(seed)
+    p = np.r_[np.full(16, 0.05), np.full(240, 0.2 / 240)]
+    return rng.choice(256, p=p, size=n).astype(np.uint8)
+
+
+@pytest.mark.parametrize("chunk_bytes", [4096, 16384])
+@pytest.mark.parametrize(
+    "n", [4096, 16384 * 3, 16384 * 2 + 5_001, 1 << 15]
+)  # whole chunks, multi-chunk, final partial chunk
+def test_encode_planes_matches_compress_plane(chunk_bytes, n):
+    params = codec.CodecParams(chunk_bytes=chunk_bytes, backend="huffman")
+    plane = _skewed_plane(n, seed=chunk_bytes + n)
+    want = codec.compress_plane(plane, params)
+    entries, payloads, tables = device_entropy.encode_planes(
+        [plane], [None], params
+    )
+    assert entries[0] == want[0]
+    assert payloads[0] == want[1]
+    assert tables[0] == want[2]
+
+
+def test_encode_planes_multi_table_one_dispatch():
+    """Planes with different tables (different byte statistics) pack under
+    their own table rows of the single stacked dispatch."""
+    params = codec.CodecParams(chunk_bytes=4096, backend="huffman")
+    planes = [
+        _skewed_plane(4096 * 2 + 777, seed=1),
+        (np.arange(4096 * 3) % 7).astype(np.uint8),        # very skewed
+        _skewed_plane(4096, seed=2)[::-1].copy(),
+    ]
+    entries, payloads, tables = device_entropy.encode_planes(
+        planes, [None] * len(planes), params
+    )
+    for plane, e, p, t in zip(planes, entries, payloads, tables):
+        we, wp, wt = codec.compress_plane(plane, params)
+        assert (e, p, t) == (we, wp, wt)
+
+
+def test_expansion_guard_stores_raw():
+    """Chunks whose packed size reaches raw size are stored raw — same
+    metadata map as the host path."""
+    params = codec.CodecParams(
+        chunk_bytes=4096, backend="huffman", incompressible=1.01, skip_chunks=0
+    )
+    rng = np.random.default_rng(9)
+    plane = rng.integers(0, 256, 4096 * 2 + 123, dtype=np.uint8)  # ~8 bits/byte
+    want_e, want_p, want_t = codec.compress_plane(plane, params)
+    entries, payloads, tables = device_entropy.encode_planes(
+        [plane], [None], params
+    )
+    assert any(e.method == codec.Method.STORE for e in entries[0])
+    assert entries[0] == want_e and payloads[0] == want_p and tables[0] == want_t
+
+
+def test_supports_envelope():
+    huff = codec.CodecParams(chunk_bytes=16384, backend="huffman")
+    assert device_entropy.supports(None, huff)
+    assert not device_entropy.supports(
+        None, codec.CodecParams(chunk_bytes=16384, backend="hufflib")
+    )
+    assert not device_entropy.supports(
+        None, codec.CodecParams(chunk_bytes=16385, backend="huffman")
+    )
+    assert device_entropy.resolve("device", None, huff) == "device"
+    assert device_entropy.resolve("auto", None, huff) == "host"  # host leaf
+    assert device_entropy.resolve(None, None, huff) == "host"
+    with pytest.raises(ValueError):
+        device_entropy.resolve("gpu", None, huff)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the entropy_backend knob through the public API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float32", "float16"])
+@pytest.mark.parametrize("n", [3, 40_001])
+def test_compress_bytes_parity(dtype, n):
+    raw = as_bytes(make_array(dtype, n, seed=n, kind="normal"))
+    ref = zipnn.compress_bytes(raw, dtype, HUFF_CFG, backend="host")
+    for be, ebe in [
+        ("host", "device"),        # mixed: host planes, device bit-pack
+        ("device", "host"),        # mixed: device planes, host bit-pack
+        ("device", "device"),      # full device
+        ("device", None),          # backend="device" implies entropy device
+    ]:
+        blob = zipnn.compress_bytes(
+            raw, dtype, HUFF_CFG, backend=be, entropy_backend=ebe
+        )
+        assert blob == ref, (be, ebe)
+    assert zipnn.decompress_bytes(ref, HUFF_CFG) == raw
+
+
+def test_hufflib_coder_falls_back_to_host():
+    raw = as_bytes(make_array("bfloat16", 30_000, seed=0))
+    cfg = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15)      # hufflib coder
+    assert zipnn.compress_bytes(
+        raw, "bfloat16", cfg, entropy_backend="device"
+    ) == zipnn.compress_bytes(raw, "bfloat16", cfg, backend="host")
+
+
+def test_config_field_and_threads():
+    raw = as_bytes(make_array("float32", 50_000, seed=3))
+    cfg = zipnn.ZipNNConfig(
+        chunk_param_bytes=1 << 15, backend="huffman", entropy_backend="device"
+    )
+    ref = zipnn.compress_bytes(raw, "float32", HUFF_CFG, backend="host")
+    for t in (1, 4):
+        assert zipnn.compress_bytes(raw, "float32", cfg, threads=t) == ref
+
+
+def test_delta_device_entropy():
+    base = make_array("bfloat16", 40_001, seed=7)
+    new = np.asarray(base).copy()
+    rng = np.random.default_rng(8)
+    idx = rng.integers(0, new.size, new.size // 50)
+    new[idx] = (np.asarray(new[idx], np.float32) * 1.01).astype(ml_dtypes.bfloat16)
+    ref = zipnn.delta_compress(new, base, HUFF_CFG, backend="host")
+    ct = zipnn.delta_compress(new, base, HUFF_CFG, entropy_backend="device")
+    assert ct.blob == ref.blob
+    back = zipnn.delta_decompress(ct, base, HUFF_CFG)
+    assert as_bytes(back) == as_bytes(np.asarray(new))
+
+
+def test_pytree_device_entropy():
+    tree = {
+        "w": make_array("bfloat16", 20_000, seed=1),
+        "b": make_array("float32", 513, seed=2),
+        "odd": np.arange(7, dtype=np.int64),                # no ZipNN layout
+    }
+    ref = zipnn.compress_pytree(tree, HUFF_CFG, backend="host")
+    man = zipnn.compress_pytree(tree, HUFF_CFG, entropy_backend="device")
+    for a, b in zip(ref["leaves"], man["leaves"]):
+        assert a.blob == b.blob
+    back = zipnn.decompress_pytree(man, HUFF_CFG)
+    for k in tree:
+        assert np.asarray(back[k]).tobytes() == np.asarray(tree[k]).tobytes()
+
+
+def test_stream_writer_device_entropy():
+    raw = as_bytes(make_array("bfloat16", 60_000, seed=4))
+    blobs = {}
+    for ebe in (None, "device"):
+        sink = io.BytesIO()
+        with engine.CompressWriter(
+            sink, "bfloat16", HUFF_CFG, window_bytes=1 << 15, entropy_backend=ebe
+        ) as w:
+            w.write(raw)
+        blobs[ebe] = sink.getvalue()
+    assert blobs[None] == blobs["device"]
+    r = engine.DecompressReader(io.BytesIO(blobs["device"]), HUFF_CFG)
+    assert r.read() == raw
+
+
+def test_checkpoint_entropy_backend(tmp_path):
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+    state = {"w": make_array("bfloat16", 20_000, seed=5)}
+    trees = {}
+    for name, ebe in [("host", None), ("dev", "device")]:
+        cfg = CheckpointConfig(
+            directory=str(tmp_path / name),
+            async_save=False,
+            entropy_backend=ebe,
+            zipnn=zipnn.ZipNNConfig(chunk_param_bytes=1 << 15, backend="huffman"),
+        )
+        mgr = CheckpointManager(cfg)
+        mgr.save(0, state, blocking=True)
+        step, tree = mgr.restore()
+        trees[name] = tree
+        with open(tmp_path / name / "step_0" / "data.bin", "rb") as f:
+            trees[name + "_bytes"] = f.read()
+    assert trees["host_bytes"] == trees["dev_bytes"]
+    assert (
+        np.asarray(trees["dev"]["w"]).tobytes()
+        == np.asarray(state["w"]).tobytes()
+    )
+
+
+def test_grad_sync_entropy_backend():
+    from repro.distributed.grad_sync import GradSync
+
+    grads = {"g": make_array("float32", 30_000, seed=6)}
+    ref, _ = GradSync(HUFF_CFG, backend="host").pack(grads)
+    man, _ = GradSync(HUFF_CFG, entropy_backend="device").pack(grads)
+    for a, b in zip(ref["leaves"], man["leaves"]):
+        assert a.blob == b.blob
+    back = GradSync(HUFF_CFG).unpack(man)
+    assert np.asarray(back["g"]).tobytes() == np.asarray(grads["g"]).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# raw kernel: multi-table dispatch vs huffman.encode_chunks
+# ---------------------------------------------------------------------------
+
+def test_bitpack_multi_kernel_vs_host_encoder():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import bitpack
+
+    chunk = 4096
+    planes = [_skewed_plane(chunk * 2, seed=11), (np.arange(chunk) % 5).astype(np.uint8)]
+    tabs = []
+    for p in planes:
+        lens = huffman.code_lengths(np.bincount(p, minlength=256) + 1)
+        tabs.append((lens, huffman.canonical_codes(lens)))
+    syms = np.concatenate(planes)
+    pids = np.asarray([0, 0, 1], dtype=np.int32)
+    len_tables = np.stack([t[0] for t in tabs]).astype(np.int32)
+    code_tables = np.stack([t[1] for t in tabs]).astype(np.int32)
+    words, nbits = bitpack.bitpack_encode_chunks_multi(
+        jnp.asarray(syms), jnp.asarray(pids),
+        jnp.asarray(len_tables), jnp.asarray(code_tables),
+        chunk_syms=chunk, interpret=True,
+    )
+    words_h, nbits_h = jax.device_get((words, nbits))
+    stream = np.frombuffer(words_h.astype(">u4").tobytes(), np.uint8)
+    for k, pid in enumerate(pids):
+        seg = syms[k * chunk : (k + 1) * chunk]
+        want = huffman.encode(seg, *tabs[pid])
+        nb = int(nbits_h[k])
+        assert nb == sum(int(tabs[pid][0][s]) for s in seg)
+        got = stream[k * chunk : k * chunk + (nb + 7) // 8].tobytes()
+        assert got == want, f"chunk {k} (table {pid}) differs from host encoder"
