@@ -115,6 +115,11 @@ def main():
     # The hufflib (zlib) coder has no device bitstream — entropy_backend is
     # still safe to set there: it silently stays on the host path.
 
+    # The byte-identity contract demonstrated above is also enforced
+    # statically: `python -m repro.analysis --strict` (zipnn-lint) checks
+    # determinism, knob threading, the container spec and the Pallas kernel
+    # contracts on every PR — rule catalog in docs/INVARIANTS.md.
+
 
 if __name__ == "__main__":
     main()

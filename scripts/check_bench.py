@@ -125,8 +125,14 @@ def main(argv=None) -> int:
     problems = compare(current, baseline, args.slack)
     if problems:
         print("BENCH REGRESSION:")
+        baseline_rel = os.path.relpath(args.baseline, REPO)
         for p in problems:
             print(f"  - {p}")
+            if os.environ.get("GITHUB_ACTIONS"):
+                # clickable annotation on the checked-in baseline in the PR
+                msg = p.replace("%", "%25").replace("\n", "%0A")
+                print(f"::error file={baseline_rel},"
+                      f"title=bench regression::{msg}")
         print(
             "If this shift is deliberate, refresh with:\n"
             "    python scripts/check_bench.py --update-baseline   # then commit"

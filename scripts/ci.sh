@@ -5,8 +5,9 @@
 #
 # ZIPNN_CI_SUITE selects which half runs (the GitHub Actions matrix splits
 # the fast and slow suites into separate jobs — see .github/workflows/ci.yml):
-#   fast  pytest -m "not slow" + parity smoke + fixture-staleness check +
-#         bench smoke + bench-regression gate
+#   lint  zipnn-lint only (pure-stdlib static analysis — no jax needed)
+#   fast  zipnn-lint + pytest -m "not slow" + parity smoke +
+#         fixture-staleness check + bench smoke + bench-regression gate
 #   slow  pytest -m "slow" only (the heavyweight fuzz/property sweeps)
 #   all   both, fast first (default — the local pre-push check)
 set -euo pipefail
@@ -14,9 +15,21 @@ cd "$(dirname "$0")/.."
 
 SUITE="${ZIPNN_CI_SUITE:-all}"
 case "$SUITE" in
-  fast|slow|all) ;;
-  *) echo "error: ZIPNN_CI_SUITE must be fast|slow|all (got '$SUITE')" >&2; exit 2 ;;
+  lint|fast|slow|all) ;;
+  *) echo "error: ZIPNN_CI_SUITE must be lint|fast|slow|all (got '$SUITE')" >&2; exit 2 ;;
 esac
+
+# zipnn-lint: the static invariant gate (determinism, knob threading,
+# container spec, kernel contracts — docs/INVARIANTS.md).  First and
+# blocking: it runs in milliseconds and catches the bug classes the
+# runtime suites only sample.  The slow split skips it (its fast sibling
+# already ran it).
+if [[ "$SUITE" != "slow" ]]; then
+  python scripts/lint.py --strict
+fi
+if [[ "$SUITE" == "lint" ]]; then
+  exit 0
+fi
 
 # Fast suite first (fail fast on logic errors), then the slow split: the
 # heavyweight fuzz/property sweeps (dense corruption flips, the full

@@ -1,0 +1,24 @@
+#!/usr/bin/env python3
+"""zipnn-lint CI entry point — thin wrapper over ``python -m repro.analysis``.
+
+Exists so the lint gate runs identically from scripts/ci.sh, the dedicated
+lint workflow job, and a bare checkout without PYTHONPATH set up:
+
+    python scripts/lint.py --strict
+
+The analyzer is pure stdlib (no jax/numpy import), so this runs on a bare
+Python — the CI lint job skips dependency installation entirely.  GitHub
+``::error file=...`` annotations are auto-emitted when GITHUB_ACTIONS is
+set (see repro.analysis.driver).
+"""
+
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.analysis.driver import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main(["--root", REPO] + sys.argv[1:]))

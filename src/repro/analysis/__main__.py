@@ -1,0 +1,7 @@
+"""``python -m repro.analysis`` — run zipnn-lint over the repo."""
+
+import sys
+
+from .driver import main
+
+sys.exit(main())

@@ -221,7 +221,7 @@ class CheckpointManager:
 
     def _scan(self) -> List[Tuple[int, str, Optional[int]]]:
         out = []
-        for name in os.listdir(self.cfg.directory):
+        for name in sorted(os.listdir(self.cfg.directory)):
             if not name.startswith("step_"):
                 continue
             mpath = os.path.join(self.cfg.directory, name, "manifest.json")

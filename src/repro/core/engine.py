@@ -105,6 +105,32 @@ _FRAME = struct.Struct("<BQQI")             # kind, raw_len, comp_len, crc
 _KIND_DATA = 1
 _KIND_END = 0
 
+# Frame bodies are read through _read_exact in pieces of at most this many
+# bytes: a corrupt u64 comp_len field must never drive a single giant
+# allocation before the truncation check can reject it.
+_READ_CHUNK = 8 << 20
+
+
+def _read_exact(fp: IO[bytes], n: int) -> bytes:
+    """Read up to ``n`` bytes, allocating at most ``_READ_CHUNK`` at a time.
+
+    Returns fewer than ``n`` bytes only at EOF, like a single ``read(n)``
+    on a regular file — callers keep their ``len(...) < n`` truncation
+    checks, but a flipped length byte now fails on the first short piece
+    instead of after a 2^64-sized buffer request.
+    """
+    if n <= _READ_CHUNK:
+        return fp.read(n)
+    parts = []
+    remaining = n
+    while remaining > 0:
+        piece = fp.read(min(remaining, _READ_CHUNK))
+        if not piece:
+            break
+        parts.append(piece)
+        remaining -= len(piece)
+    return b"".join(parts)
+
 
 # ---------------------------------------------------------------------------
 # chunk scheduler: shared thread pools
@@ -424,7 +450,7 @@ class DecompressReader:
                     if last is not None:
                         yield last
                     return
-                blob = self._fp.read(comp_len)
+                blob = _read_exact(self._fp, comp_len)
                 if len(blob) < comp_len:
                     raise IOError("truncated ZNS1 frame body")
                 if zlib.crc32(blob) != crc:
@@ -501,7 +527,7 @@ def frame_records(src: PathOrFile) -> Iterator[Tuple[int, int, bytes]]:
                 raise IOError(f"corrupt ZNS1 frame kind {kind}")
             if kind == _KIND_END:
                 return
-            blob = fin.read(comp_len)
+            blob = _read_exact(fin, comp_len)
             if len(blob) < comp_len:
                 raise IOError("truncated ZNS1 frame body")
             yield raw_len, comp_len, blob

@@ -478,6 +478,7 @@ def compress_pytree(
         if comp[i] is None:
             # The plane path is host for these leaves, but a 'device'/'auto'
             # request still covers their entropy stage (mixed mode).
+            # zipnn: allow(knob-redefault): leaves the device window skipped are host-planed by design; mixed mode keeps the requested entropy backend
             comp[i] = compress_array(
                 leaf, config, threads=threads, backend="host",
                 entropy_backend=(
@@ -567,6 +568,7 @@ def decompress_pytree(
 
     for i, ct in enumerate(cts):
         if arrays[i] is None:
+            # zipnn: allow(knob-redefault): leaves the device batch skipped decode on the host path by design (blobs are byte-identical either way)
             arrays[i] = decompress_array(ct, config, threads=threads, backend="host")
     return jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
 
@@ -695,6 +697,7 @@ def delta_compress_batched(
 
     for i, (a, b) in enumerate(zip(news, bases)):
         if out[i] is None:
+            # zipnn: allow(knob-redefault): pairs the device batch skipped take the host delta path by design; entropy backend still follows the request
             out[i] = delta_compress(
                 a, b, config, threads=threads, backend="host",
                 entropy_backend=(
@@ -745,6 +748,7 @@ def delta_decompress(
             )
     b = _to_numpy(base)
     x = np.frombuffer(
+        # zipnn: allow(knob-redefault): delta XOR happens host-side here, so the plane decode is pinned to host; device delta decode goes through decompress_pytree
         decompress_bytes(ct.blob, config, threads=threads, backend="host"),
         dtype=np.uint8,
     )

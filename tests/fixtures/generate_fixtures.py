@@ -149,8 +149,15 @@ def check() -> int:
         stale.append("meta.json: does not match regenerated metadata")
     if stale:
         print("STALE fixtures (encoder output drifted from the checked-in blobs):")
+        repo = os.path.dirname(os.path.dirname(HERE))
         for s in stale:
             print(f"  - {s}")
+            if os.environ.get("GITHUB_ACTIONS"):
+                # clickable annotation on the stale fixture file in the PR
+                name = s.split(":", 1)[0]
+                rel = os.path.relpath(os.path.join(HERE, name), repo)
+                msg = s.replace("%", "%25").replace("\n", "%0A")
+                print(f"::error file={rel},title=stale fixture::{msg}")
         print(
             "If the format change is deliberate, regenerate with\n"
             "    PYTHONPATH=src python tests/fixtures/generate_fixtures.py"
