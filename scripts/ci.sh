@@ -59,13 +59,17 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/fixtures/generate_fixtu
 
 # Decode-backend parity smoke: host vs device × threads 1 vs 4 through the
 # shared harness (tests/parity.py), including the golden-blob fixtures and
-# the device entropy stage (fused Huffman bit-pack) on the encode side.
+# the device entropy stage on BOTH sides: the fused Huffman bit-pack on
+# encode, and the device Huffman decoder kernel on decode (every sweep row
+# and golden fixture also decodes with entropy_backend=device, asserted
+# bit-exact against the raw bytes).
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 
 # Fast host/device backend parity smoke: small corpus through the Table 3
 # sweep; asserts device blobs byte-identical to host blobs (including the
-# full-device plane+entropy path) AND device decode bit-identical to the
-# raw bytes (interpret mode on CPU-only hosts) and writes the result JSON.
+# full-device plane+entropy path) AND device decode — plane consumer and
+# device-entropy decoder rows alike — bit-identical to the raw bytes
+# (interpret mode on CPU-only hosts) and writes the result JSON.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
     --backend both --n 120000 --json BENCH_table3_smoke.json
 

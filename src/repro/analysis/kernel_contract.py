@@ -66,6 +66,7 @@ KERNEL_CONTRACT: Dict[str, Tuple[Optional[str], ...]] = {
     "xor_delta_2d": ("uint32", "int32"),
     "bitpack_encode_chunks": ("uint32", "int32"),
     "bitpack_encode_chunks_multi": ("uint32", "int32"),
+    "huffdecode_chunks_multi": ("uint8", "int32"),
     "plane_consumer": (None,),
 }
 

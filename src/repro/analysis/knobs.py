@@ -55,7 +55,9 @@ SCOPE = (
 )
 
 # The public-surface contract: entry point -> knobs it must accept.
-# Decompression takes no entropy_backend (the container records the coder).
+# Decompression takes entropy_backend too: the container records the
+# *coder*, but the knob picks where its Huffman chunks decode (host work
+# items vs the device decoder kernel) — bytes identical either way.
 _CBE = frozenset(("threads", "backend", "entropy_backend"))
 _CB = frozenset(("threads", "backend"))
 SURFACE: Dict[str, Dict[str, frozenset]] = {
@@ -65,16 +67,16 @@ SURFACE: Dict[str, Dict[str, frozenset]] = {
         "compress_pytree": _CBE,
         "delta_compress": _CBE,
         "delta_compress_batched": _CBE,
-        "decompress_bytes": _CB,
-        "decompress_array": _CB,
-        "decompress_pytree": _CB,
-        "delta_decompress": _CB,
+        "decompress_bytes": _CBE,
+        "decompress_array": _CBE,
+        "decompress_pytree": _CBE,
+        "delta_decompress": _CBE,
     },
     "src/repro/core/engine.py": {
         "compress_file": _CBE,
         "CompressWriter": _CBE,
-        "decompress_file": _CB,
-        "DecompressReader": _CB,
+        "decompress_file": _CBE,
+        "DecompressReader": _CBE,
     },
     "src/repro/checkpoint/hub.py": {
         "simulate_transfer": _CBE,

@@ -78,8 +78,9 @@ def simulate_transfer(
     (codec time scales down with cores, wire time is fixed); ``backend``
     selects both the plane-producer path on upload and the plane-consumer
     path on download (host numpy vs fused device dispatch, bytes
-    identical); ``entropy_backend`` overrides just the upload's Huffman
-    bit-pack stage (see core/device_entropy.py — mixed mode)."""
+    identical); ``entropy_backend`` overrides just the Huffman entropy
+    stage on both directions — the bit-pack kernel on upload, the decoder
+    kernel on download (see core/device_entropy.py — mixed mode)."""
     bw = CHANNELS[channel] * 1e6
     t0 = time.perf_counter()
     blob = zipnn.compress_bytes(
@@ -88,7 +89,10 @@ def simulate_transfer(
     )
     t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
-    back = zipnn.decompress_bytes(blob, config, threads=threads, backend=backend)
+    back = zipnn.decompress_bytes(
+        blob, config, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
+    )
     t_dec = time.perf_counter() - t0
     assert back == bytes(data), "hub transfer must be lossless"
     codec = t_comp if direction == "upload" else t_dec
@@ -108,6 +112,7 @@ def _overlapped_download(
     threads: Optional[int],
     bw: float,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> Tuple[float, float]:
     """Pipelined download time over a ``ZNS1`` container.
 
@@ -136,7 +141,10 @@ def _overlapped_download(
         wire_total += wire
         total += wire if prev_dec is None else max(wire, prev_dec)
         t0 = time.perf_counter()
-        zipnn.decompress_bytes(blob, config, threads=threads, backend=backend)
+        zipnn.decompress_bytes(
+            blob, config, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
+        )
         prev_dec = time.perf_counter() - t0
     if prev_dec is not None:
         total += prev_dec
@@ -183,13 +191,15 @@ def simulate_file_transfer(
         t0 = time.perf_counter()
         with open(os.devnull, "wb") as sink:
             n = engine.decompress_file(
-                comp_path, sink, config, threads=threads, backend=backend
+                comp_path, sink, config, threads=threads, backend=backend,
+                entropy_backend=entropy_backend,
             )
         t_dec = time.perf_counter() - t0
         overlap_total = overlap_codec = 0.0
         if direction == "download":
             overlap_total, overlap_codec = _overlapped_download(
-                comp_path, config, threads, bw, backend=backend
+                comp_path, config, threads, bw, backend=backend,
+                entropy_backend=entropy_backend,
             )
     if n != raw_bytes:
         raise AssertionError("streamed hub transfer must be lossless")

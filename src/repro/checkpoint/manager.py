@@ -237,7 +237,9 @@ class CheckpointManager:
         steps = self._scan()
         return steps[-1][0] if steps else None
 
-    def _load_flat(self, step: int) -> Dict[str, np.ndarray]:
+    def _load_flat(
+        self, step: int, device_resident: bool = False
+    ) -> Dict[str, np.ndarray]:
         d = os.path.join(self.cfg.directory, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -245,7 +247,12 @@ class CheckpointManager:
             data = f.read()
         base_flat = None
         if manifest["kind"] == "delta":
-            base_flat = self._load_flat(manifest["base_step"])
+            # The base rides the same residence as the restore target: a
+            # device-resident restore XORs against a device-resident base
+            # (fused on device), never bouncing either through host memory.
+            base_flat = self._load_flat(
+                manifest["base_step"], device_resident=device_resident
+            )
         out = {}
         for e in manifest["entries"]:
             blob = data[e["offset"] : e["offset"] + e["size"]]
@@ -254,19 +261,32 @@ class CheckpointManager:
             ct = zipnn.CompressedTensor(blob, e["dtype"], tuple(e["shape"]))
             if e["kind"] == "delta":
                 out[e["key"]] = zipnn.delta_decompress(
-                    ct, base_flat[e["key"]], self.cfg.zipnn
+                    ct, base_flat[e["key"]], self.cfg.zipnn,
+                    device_resident=device_resident,
                 )
             else:
-                out[e["key"]] = zipnn.decompress_array(ct, self.cfg.zipnn)
+                out[e["key"]] = zipnn.decompress_array(
+                    ct, self.cfg.zipnn, device_resident=device_resident
+                )
         return out
 
-    def restore(self, step: Optional[int] = None) -> Tuple[int, PyTree]:
+    def restore(
+        self, step: Optional[int] = None, *, device_resident: bool = False
+    ) -> Tuple[int, PyTree]:
         """Newest valid checkpoint ≤ step (or overall). Torn/corrupt saves
-        are skipped — the crash-recovery contract."""
+        are skipped — the crash-recovery contract.
+
+        ``device_resident=True`` keeps restored leaves on device as
+        ``jax.Array``\\ s when the configured decode backend resolves to
+        device (see ``zipnn.decompress_array``) — bits identical, zero
+        device→host bounce; host-resolved leaves still restore as numpy.
+        """
         candidates = [s for s, _, _ in self._scan() if step is None or s <= step]
         for s in reversed(candidates):
             try:
-                return s, _unflatten(self._load_flat(s))
+                return s, _unflatten(
+                    self._load_flat(s, device_resident=device_resident)
+                )
             except (IOError, OSError, KeyError):
                 continue
         raise FileNotFoundError(f"no valid checkpoint in {self.cfg.directory}")
@@ -275,13 +295,17 @@ class CheckpointManager:
         """Restore + device_put onto an arbitrary mesh (elastic rescale).
 
         With ``CheckpointConfig.backend='device'|'auto'`` the restore's
-        decode back half (un-byte-group + inverse rotate + delta XOR) runs
-        as fused device dispatches (``core/device_unplane.py``) — the
-        host-side planed buffers the old path materialized never exist.
+        full decode — the device Huffman entropy stage plus the fused
+        un-byte-group + inverse rotate + delta XOR back half
+        (``core/device_entropy.py`` / ``core/device_unplane.py``) — runs on
+        device and leaves stay device-resident straight into the
+        ``device_put`` re-shard: only compressed bytes cross host→device
+        and nothing bounces back.  Host-resolved configs restore through
+        numpy exactly as before.
         """
         from repro.distributed import sharding
 
-        s, tree = self.restore(step)
+        s, tree = self.restore(step, device_resident=True)
         return s, sharding.device_put_tree(tree, mesh, specs)
 
     # ------------------------------------------------------------- retention

@@ -38,22 +38,42 @@ Support envelope: the codec's ``backend == "huffman"`` coder only — the
 with ``chunk_bytes % 4 == 0`` (the uint32 word reduce).  ``ZERO`` /
 ``STORE`` / ``ZLIB`` chunks and the §4.2 delta LZ path stay host work
 items, as does everything on fallback.
+
+**Decode twin** (:func:`decode_planes`): every ``HUFF`` chunk of a parsed
+container decodes in one fused Pallas dispatch
+(:func:`repro.kernels.huffdecode.huffdecode_chunks_multi` — per-chunk LUT
+row selection over stacked canonical tables, grid over chunks, serial bit
+cursor per chunk).  The *compressed* payload words + stacked LUTs upload
+once; decoded symbols can stay device-resident
+(``device_resident=True``) so the fused un-plane consumer never re-uploads
+them — the zero-bounce restore path.  CRC verification, the
+``decode_many``-equivalent bit-cursor + pad-bit integrity checks, and
+``ZERO``/``STORE``/``ZLIB`` chunk decode stay host-side; those spliced
+chunks ride one additional upload on the device-resident path.  The decode
+envelope (:func:`supports_decode`) keys off the *container's* chunk
+geometry, not the config's coder: the stream records which chunks are
+``HUFF``, so any blob the canonical coder produced decodes on device
+regardless of the configured encode backend.
 """
 
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import zlib
+from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from . import bitlayout, codec
+from . import bitlayout, codec, huffman
 
 __all__ = [
     "BACKENDS",
     "is_available",
     "supports",
+    "supports_decode",
     "resolve",
+    "resolve_decode",
     "encode_planes",
+    "decode_planes",
 ]
 
 BACKENDS = ("host", "device", "auto")
@@ -102,6 +122,46 @@ def resolve(
         return (
             "device"
             if supports(layout, params) and device_plane._on_accelerator(leaf)
+            else "host"
+        )
+    raise ValueError(
+        f"unknown entropy backend {requested!r}; expected one of {BACKENDS}"
+    )
+
+
+def supports_decode(chunk_bytes: int) -> bool:
+    """Can the fused decode path reproduce the host decoder's bytes?
+
+    Decode keys off the *container*, not the config: the stream records
+    which chunks are ``HUFF`` (only the canonical coder emits them), so the
+    envelope is just whole-uint32-word chunks plus jax availability.
+    """
+    return chunk_bytes % 4 == 0 and is_available()
+
+
+def resolve_decode(
+    requested: Optional[str], chunk_bytes: int, base=None
+) -> str:
+    """Decode twin of :func:`resolve`.
+
+    ``auto`` keys off accelerator attachment (or an accelerator-resident
+    delta ``base``) — decoded symbols land on device, so residence of the
+    hardware is the signal, mirroring ``device_unplane.resolve``.
+    """
+    if requested is None or requested == "host":
+        return "host"
+    if requested == "device":
+        return "device" if supports_decode(chunk_bytes) else "host"
+    if requested == "auto":
+        from . import device_plane, device_unplane
+
+        return (
+            "device"
+            if supports_decode(chunk_bytes)
+            and (
+                device_unplane._accelerator_attached()
+                or device_plane._on_accelerator(base)
+            )
             else "host"
         )
     raise ValueError(
@@ -245,3 +305,268 @@ def encode_planes(
         payloads_all.append(payloads)
         tables_all.append(pc.table_blob() if needs_table else None)
     return entries_all, payloads_all, tables_all
+
+
+# ---------------------------------------------------------------------------
+# fused decode
+# ---------------------------------------------------------------------------
+
+def _stacked_luts(
+    tables_all: Sequence[Optional[bytes]],
+) -> Tuple[np.ndarray, int]:
+    """Fused ``(sym << 8) | len`` LUTs, one row per plane, at a shared width.
+
+    The shared width is the max code length across every plane's table —
+    canonical prefixes stay valid at any LUT width ≥ their own max length,
+    so one kernel launch can gather against any plane's row.  Planes
+    without a table (no HUFF chunks) get an all-zero row that is never
+    selected.
+    """
+    lens_all: List[Optional[np.ndarray]] = []
+    max_l = 1
+    for tb in tables_all:
+        if tb is None:
+            lens_all.append(None)
+            continue
+        lens = huffman.unpack_table(tb)
+        lens_all.append(lens)
+        max_l = max(max_l, int(lens.max(initial=1)))
+    luts = np.zeros((len(tables_all), 1 << max_l), dtype=np.int32)
+    for p, lens in enumerate(lens_all):
+        if lens is None:
+            continue
+        codes = huffman.canonical_codes(lens)
+        lut_sym, lut_len = huffman._build_lut(lens, codes, max_l)
+        luts[p] = (lut_sym.astype(np.int32) << 8) | lut_len.astype(np.int32)
+    return luts, max_l
+
+
+def _unpack_jobs(
+    jobs: Sequence[Tuple[int, int]],
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    luts: np.ndarray,
+    chunk_bytes: int,
+):
+    """Run one fused decode dispatch over ``jobs``; return device symbols.
+
+    ``jobs`` is ``(plane_idx, chunk_idx)`` per HUFF chunk.  Payload bytes
+    pack into big-endian uint32 words (the encode kernel's bit convention),
+    zero-padded to the ``chunk_bytes`` capacity — valid payloads are always
+    shorter (expansion guard), and oversized ones are rejected up front so
+    corrupt metadata can never drive an out-of-range copy.  After the
+    launch the per-chunk bit cursors (a metadata-sized transfer) feed the
+    same integrity checks as ``huffman.decode_many``: the cursor must land
+    inside the payload's final byte and the 0-7 pad bits must be zero —
+    truncated or flipped words fail cleanly, never silently.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import huffdecode
+
+    c = len(jobs)
+    cw = chunk_bytes // 4
+    words = np.zeros(c * cw, dtype=np.uint32)
+    pids = np.empty(c, dtype=np.int32)
+    counts = np.empty(c, dtype=np.int32)
+    sizes = np.empty(c, dtype=np.int64)
+    for k, (p, ch) in enumerate(jobs):
+        payload = payloads_all[p][ch]
+        if len(payload) > chunk_bytes:
+            raise ValueError(
+                "corrupt Huffman payload: payload larger than its chunk"
+            )
+        pad = -len(payload) % 4
+        w = np.frombuffer(bytes(payload) + b"\x00" * pad, dtype=">u4")
+        words[k * cw : k * cw + w.size] = w
+        pids[k] = p
+        counts[k] = entries_all[p][ch].raw_len
+        sizes[k] = len(payload)
+    syms, cursors = huffdecode.huffdecode_chunks_multi(
+        jnp.asarray(words),
+        jnp.asarray(pids),
+        jnp.asarray(counts),
+        jnp.asarray(luts),
+        chunk_bytes=chunk_bytes,
+        interpret=jax.default_backend() != "tpu",
+    )
+    cursors_h = np.asarray(jax.device_get(cursors), dtype=np.int64)
+    slack = sizes * 8 - cursors_h
+    if np.any((slack < 0) | (slack >= 8)):
+        raise ValueError(
+            "corrupt Huffman payload: bit cursor did not land on the "
+            "chunk's final byte"
+        )
+    for k, (p, ch) in enumerate(jobs):
+        s = int(slack[k])
+        payload = payloads_all[p][ch]
+        if s and payload and payload[-1] & ((1 << s) - 1):
+            raise ValueError(
+                "corrupt Huffman payload: nonzero pad bits in the chunk's "
+                "final byte"
+            )
+    return syms
+
+
+def decode_planes(
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    tables_all: Sequence[Optional[bytes]],
+    params: codec.CodecParams,
+    pool=None,
+    device_resident: bool = False,
+) -> List[Any]:
+    """Device-backed equivalent of the per-plane host decompress loop.
+
+    Every payload's CRC is verified first (same errors, same order as
+    :meth:`~repro.core.codec.PlaneCodec.decode_into`), then every ``HUFF``
+    chunk across *all* planes decodes in one fused device dispatch (split
+    only at :data:`MAX_BATCH_BYTES`) — the compressed words + stacked LUTs
+    are the only data-sized host→device transfer.  ``ZERO`` / ``STORE`` /
+    ``ZLIB`` chunks decode as host work items on ``pool`` and are spliced
+    back in.
+
+    Returns per-plane flat uint8 arrays matching
+    :func:`repro.core.codec.decompress_plane` byte-for-byte — numpy by
+    default (one device→host transfer of decoded symbols), or
+    device-resident ``jax.Array`` planes with ``device_resident=True``
+    (spliced on device; no symbol download), ready for
+    :func:`repro.core.device_unplane.consume_planes` to consume in place.
+    """
+    cb = params.chunk_bytes
+    flat = [
+        (p, c)
+        for p in range(len(entries_all))
+        for c in range(len(entries_all[p]))
+    ]
+
+    def verify(ids):
+        for k in ids:
+            p, c = flat[k]
+            e = entries_all[p][c]
+            if e.method == codec.Method.ZERO:
+                if e.comp_len or e.crc:
+                    raise IOError(
+                        "corrupt chunk entry: ZERO chunk with a payload"
+                    )
+            elif zlib.crc32(payloads_all[p][c]) != e.crc:
+                raise IOError(f"chunk payload CRC mismatch (chunk {c})")
+        return [None] * len(ids)
+
+    codec._fan_out(pool, len(flat), verify)
+
+    jobs = [
+        (p, c) for (p, c) in flat
+        if entries_all[p][c].method == codec.Method.HUFF
+    ]
+    huff_planes = {p for (p, _) in jobs}
+    for p in huff_planes:
+        if tables_all[p] is None:
+            raise IOError("corrupt stream: HUFF chunks but no plane table")
+    if any(
+        not payloads_all[p][c] and entries_all[p][c].raw_len for (p, c) in jobs
+    ):
+        raise IOError("corrupt chunk entry: empty HUFF payload")
+
+    huff_syms: dict = {}
+    if jobs:
+        luts, _ = _stacked_luts(tables_all)
+        per_launch = max(1, MAX_BATCH_BYTES // (2 * cb))
+        for lo in range(0, len(jobs), per_launch):
+            batch = jobs[lo : lo + per_launch]
+            syms = _unpack_jobs(batch, entries_all, payloads_all, luts, cb)
+            if not device_resident:
+                syms = np.asarray(syms)       # one transfer per launch window
+            for k, (p, ch) in enumerate(batch):
+                huff_syms[(p, ch)] = syms[k]
+
+    # Host work items: every non-HUFF chunk (identical decode + integrity
+    # checks to PlaneCodec.decode_into).
+    others = [
+        (p, c) for (p, c) in flat
+        if entries_all[p][c].method != codec.Method.HUFF
+    ]
+
+    def decode_other(ids):
+        out = []
+        for k in ids:
+            p, c = others[k]
+            e = entries_all[p][c]
+            payload = payloads_all[p][c]
+            if e.method == codec.Method.ZERO:
+                out.append(np.zeros(e.raw_len, dtype=np.uint8))
+            elif e.method == codec.Method.STORE:
+                if e.comp_len != e.raw_len:
+                    raise IOError(
+                        "corrupt chunk entry: STORE length != raw length"
+                    )
+                out.append(np.frombuffer(payload, dtype=np.uint8))
+            elif e.method in (codec.Method.ZLIB, codec.Method.HUFFLIB):
+                blob = codec._unzlib(payload, e.raw_len)
+                if len(blob) != e.raw_len:
+                    raise IOError(
+                        "corrupt zlib chunk payload: wrong decoded length"
+                    )
+                out.append(np.frombuffer(blob, dtype=np.uint8))
+            else:
+                raise ValueError(f"unknown method {e.method}")
+        return out
+
+    other_chunks = dict(
+        zip(others, codec._fan_out(pool, len(others), decode_other))
+    )
+
+    if not device_resident:
+        planes: List[Any] = []
+        for p in range(len(entries_all)):
+            entries = entries_all[p]
+            total = sum(e.raw_len for e in entries)
+            out = np.empty(total, dtype=np.uint8)
+            off = 0
+            for c, e in enumerate(entries):
+                piece = (
+                    huff_syms[(p, c)][: e.raw_len]
+                    if e.method == codec.Method.HUFF
+                    else other_chunks[(p, c)]
+                )
+                out[off : off + e.raw_len] = piece
+                off += e.raw_len
+            planes.append(out)
+        return planes
+
+    import jax.numpy as jnp
+
+    # Device splice: all host-decoded (non-HUFF) chunk bytes ride ONE
+    # upload; per-chunk device slices interleave with the kernel-decoded
+    # symbol rows so each plane assembles without a host bounce.
+    splice_dev = None
+    splice_off: dict = {}
+    if others:
+        off = 0
+        parts = []
+        for key in others:
+            piece = other_chunks[key]
+            splice_off[key] = (off, off + piece.size)
+            parts.append(piece)
+            off += piece.size
+        splice_dev = jnp.asarray(
+            np.concatenate(parts) if len(parts) > 1 else parts[0]
+        )
+    planes = []
+    for p in range(len(entries_all)):
+        entries = entries_all[p]
+        pieces = []
+        for c, e in enumerate(entries):
+            if e.method == codec.Method.HUFF:
+                pieces.append(huff_syms[(p, c)][: e.raw_len])
+            else:
+                lo, hi = splice_off[(p, c)]
+                pieces.append(splice_dev[lo:hi])
+        if not pieces:
+            planes.append(np.empty(0, dtype=np.uint8))
+        elif len(pieces) == 1:
+            planes.append(pieces[0])
+        else:
+            planes.append(jnp.concatenate(pieces))
+    return planes

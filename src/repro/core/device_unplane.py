@@ -38,6 +38,19 @@ transferred element buffer — per-leaf kernel-launch latency never
 dominates real model trees.  Decode needs no chunk alignment between
 leaves, only the total row-block pad; zero pad bytes reconstruct to zero
 elements and are sliced off.
+
+Zero-bounce composition with the device entropy stage: plane arrays may
+already be **device-resident** ``jax.Array``\\ s (the output of
+:func:`repro.core.device_entropy.decode_planes` with
+``device_resident=True``) — they are concatenated and padded on device
+instead of re-uploaded.  :func:`consume_payloads` is the compressed-payload
+entry point that chains the two: kernel-decoded symbols feed straight into
+the fused un-byte-group/rotate/XOR dispatch, so the only data-sized
+host→device transfer is the compressed payload itself.  With
+``device_resident=True`` the *output* also stays on device (per-leaf flat
+uint16/uint32 element arrays, no ``device_get``), which is what
+``CheckpointManager.shard_restore`` consumes for restores that never
+round-trip through host memory.
 """
 
 from __future__ import annotations
@@ -61,6 +74,7 @@ __all__ = [
     "resolve",
     "consume_planes",
     "consume_planes_batched",
+    "consume_payloads",
 ]
 
 BACKENDS = ("host", "device", "auto")
@@ -111,27 +125,64 @@ def resolve(
 
 
 def consume_planes(
-    planes: Sequence[np.ndarray],
+    planes: Sequence[Any],
     layout: bitlayout.BitLayout,
     base: Any = None,
-) -> np.ndarray:
+    device_resident: bool = False,
+) -> Any:
     """Single-leaf convenience wrapper around :func:`consume_planes_batched`.
 
     ``base`` enables the fused §4.2 inverse XOR-delta path (the
     reconstructed delta is XORed with ``base`` on device, so the delta
     stream never materializes host-side).  Returns the flat uint8 byte
-    view — the exact inverse of :func:`repro.core.bitlayout.to_planes`.
+    view — the exact inverse of :func:`repro.core.bitlayout.to_planes` —
+    or, with ``device_resident=True``, the flat device-resident
+    uint16/uint32 element array (no device→host transfer).
     """
     return consume_planes_batched(
-        [planes], layout, bases=None if base is None else [base]
+        [planes], layout, bases=None if base is None else [base],
+        device_resident=device_resident,
     )[0]
 
 
+def consume_payloads(
+    entries_all: Sequence[Sequence[Any]],
+    payloads_all: Sequence[Sequence[bytes]],
+    tables_all: Sequence[Optional[bytes]],
+    params: Any,
+    layout: bitlayout.BitLayout,
+    base: Any = None,
+    pool=None,
+    device_resident: bool = False,
+) -> Any:
+    """Compressed-payload entry point: decode + consume without a bounce.
+
+    The parsed container's ``HUFF`` payloads decode on device
+    (:func:`repro.core.device_entropy.decode_planes`,
+    ``device_resident=True``) and the kernel-decoded symbol planes feed
+    straight into the fused un-byte-group/rotate/XOR dispatch — the
+    compressed payload is the only data-sized host→device transfer
+    (STORE/expansion-guard chunks splice in via one side upload).  Returns
+    the leaf's flat uint8 bytes, or the device-resident element array with
+    ``device_resident=True``.
+    """
+    from . import device_entropy
+
+    planes = device_entropy.decode_planes(
+        entries_all, payloads_all, tables_all, params,
+        pool=pool, device_resident=True,
+    )
+    return consume_planes(
+        planes, layout, base=base, device_resident=device_resident
+    )
+
+
 def consume_planes_batched(
-    planes_list: Sequence[Sequence[np.ndarray]],
+    planes_list: Sequence[Sequence[Any]],
     layout: bitlayout.BitLayout,
     bases: Optional[Sequence[Any]] = None,
-) -> List[np.ndarray]:
+    device_resident: bool = False,
+) -> List[Any]:
     """Pack many leaves' planes into one fused dispatch; return per-leaf bytes.
 
     All leaves must share ``layout``.  Each plane index is concatenated
@@ -139,6 +190,12 @@ def consume_planes_batched(
     alignment, and a single ``plane_consumer`` launch + a single
     ``jax.device_get`` reconstruct every leaf's raw bytes.  Oversized
     batches split at :data:`~repro.core.device_plane.MAX_BATCH_BYTES`.
+
+    Plane arrays may be host numpy or device-resident ``jax.Array``\\ s
+    (the device entropy stage's output) — device planes concatenate on
+    device instead of re-uploading.  With ``device_resident=True`` the
+    per-leaf results stay on device as flat uint16/uint32 element arrays
+    and no ``device_get`` happens at all.
     """
     if bases is not None and len(bases) != len(planes_list):
         raise ValueError("bases must pair 1:1 with planes_list")
@@ -166,6 +223,7 @@ def consume_planes_batched(
                     consume_planes_batched(
                         planes_list[start:i], layout,
                         None if bases is None else bases[start:i],
+                        device_resident=device_resident,
                     )
                 )
                 start, acc = i, 0
@@ -174,6 +232,7 @@ def consume_planes_batched(
             consume_planes_batched(
                 planes_list[start:], layout,
                 None if bases is None else bases[start:],
+                device_resident=device_resident,
             )
         )
         return out
@@ -194,12 +253,25 @@ def consume_planes_batched(
     tail = -total % align
 
     # One upload per plane index: the concatenation of every leaf's plane.
+    # Device-resident planes (the fused entropy decoder's output) stay on
+    # device — concatenation/padding happen there, never a re-upload.
     dev_planes = []
     for p in range(layout.n_planes):
-        parts = [np.ascontiguousarray(planes[p]) for planes in planes_list]
-        if tail:
-            parts.append(np.zeros(tail, np.uint8))
-        cat = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        parts = [planes[p] for planes in planes_list]
+        if any(not isinstance(x, np.ndarray) for x in parts):
+            jparts = [
+                x if not isinstance(x, np.ndarray)
+                else jnp.asarray(np.ascontiguousarray(x))
+                for x in parts
+            ]
+            if tail:
+                jparts.append(jnp.zeros(tail, jnp.uint8))
+            cat = jparts[0] if len(jparts) == 1 else jnp.concatenate(jparts)
+        else:
+            nparts = [np.ascontiguousarray(x) for x in parts]
+            if tail:
+                nparts.append(np.zeros(tail, np.uint8))
+            cat = nparts[0] if len(nparts) == 1 else np.concatenate(nparts)
         dev_planes.append(
             jnp.asarray(cat).reshape(-1, fused_unplane.LANES)
         )
@@ -228,6 +300,16 @@ def consume_planes_batched(
         tuple(dev_planes), base2, itemsize=layout.itemsize,
         interpret=jax.default_backend() != "tpu",
     )
+    if device_resident:
+        # Zero-bounce: per-leaf element slices stay on device for the
+        # caller (bitcast to the real dtype / device_put re-shard there).
+        elems_dev = x2.reshape(-1)
+        out = []
+        off = 0
+        for s in sizes:
+            out.append(elems_dev[off : off + s])
+            off += s
+        return out
     # The one device→host transfer: reconstructed elements for the batch.
     elems = np.asarray(jax.device_get(x2)).reshape(-1)
 

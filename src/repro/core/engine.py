@@ -65,11 +65,14 @@ knob on :class:`CompressWriter` / :func:`compress_file` (and every
 ``zipnn`` compression entry point) overrides just that stage for mixed
 mode.
 
-The same knob covers the decode work items: :class:`DecompressReader` /
-:func:`decompress_file` pass ``backend=`` through to
-``zipnn.decompress_bytes``, whose back half (un-byte-group + inverse
+The same knobs cover the decode work items: :class:`DecompressReader` /
+:func:`decompress_file` pass ``backend=`` and ``entropy_backend=`` through
+to ``zipnn.decompress_bytes``.  The back half (un-byte-group + inverse
 rotate) runs either as pooled numpy scatters or as one fused Pallas
-dispatch per frame (:mod:`repro.core.device_unplane`), composing with the
+dispatch per frame (:mod:`repro.core.device_unplane`); the entropy decode
+runs either as pooled host chunk work items or through the device Huffman
+decoder kernel (:mod:`repro.core.device_entropy`), in which case only the
+frame's compressed payload crosses host→device.  Both compose with the
 reader's frame prefetch: frame k's planes can be consuming on device while
 frame k+1's bytes are read and CRC-checked.
 
@@ -363,8 +366,10 @@ class DecompressReader:
     overlap, one frame in flight, decoded stream unchanged.
 
     ``backend`` selects the decode back half per frame ('host' | 'device'
-    | 'auto' — see ``core/device_unplane.py``); decoded bytes are
-    identical for every setting.
+    | 'auto' — see ``core/device_unplane.py``) and ``entropy_backend``
+    the per-frame entropy decode (host chunk work items vs the device
+    Huffman decoder kernel — see ``core/device_entropy.py``); decoded
+    bytes are identical for every setting.
     """
 
     def __init__(
@@ -374,12 +379,14 @@ class DecompressReader:
         *,
         threads: Optional[int] = None,
         backend: Optional[str] = None,
+        entropy_backend: Optional[str] = None,
     ):
         from . import zipnn
 
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if threads is None else threads
         self._backend = backend
+        self._entropy_backend = entropy_backend
         self._fp, self._own = _open(fp, "rb")
         hdr = self._fp.read(_SHDR.size)
         if len(hdr) < _SHDR.size:
@@ -399,7 +406,8 @@ class DecompressReader:
         from . import zipnn
 
         return zipnn.decompress_bytes(
-            blob, self._config, threads=self._threads, backend=self._backend
+            blob, self._config, threads=self._threads, backend=self._backend,
+            entropy_backend=self._entropy_backend,
         )
 
     def _frame_iter(self) -> Iterator[bytes]:
@@ -579,11 +587,15 @@ def decompress_file(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> int:
     """Stream-decompress a ``ZNS1`` container; returns raw bytes written."""
     fout, own_out = _open(dst, "wb")
     try:
-        with DecompressReader(src, config, threads=threads, backend=backend) as r:
+        with DecompressReader(
+            src, config, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
+        ) as r:
             total = 0
             for raw in r.frames():
                 fout.write(raw)

@@ -304,4 +304,16 @@ def decode_many(
             "corrupt Huffman payload: bit cursor did not land on the "
             "chunk's final byte"
         )
+    # Every encoder (host packbits and the device bit-pack kernel alike)
+    # zeroes the 0-7 pad bits of a chunk's final byte, so nonzero pad is
+    # corruption even when the cursor lands correctly — matching the device
+    # kernel's masked-tail semantics instead of silently accepting garbage.
+    live = counts > 0
+    last = buf[np.clip(starts + sizes - 1, 0, buf.size - 1)]
+    pad_mask = (np.left_shift(1, np.clip(slack, 0, 7)) - 1).astype(np.uint8)
+    if np.any(live & (slack > 0) & ((last & pad_mask) != 0)):
+        raise ValueError(
+            "corrupt Huffman payload: nonzero pad bits in the chunk's "
+            "final byte"
+        )
     return [out[c, : int(counts[c])].copy() for c in range(n_chunks)]

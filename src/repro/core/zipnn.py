@@ -46,6 +46,19 @@ un-byte-group + inverse rotate + inverse XOR-delta as one fused Pallas
 dispatch; ``"auto"`` picks device only when an accelerator is attached (or
 the delta base already lives on one).  Decoded bytes are bit-identical
 across backends × thread counts — asserted by ``tests/parity.py``.
+
+The ``entropy_backend=`` knob covers decode too: ``"device"`` decodes the
+container's ``HUFF`` chunks in one fused Pallas dispatch (see
+:mod:`.device_entropy` / :mod:`repro.kernels.huffdecode`) — only the
+*compressed* payload crosses host→device, and when the plane backend is
+also device the kernel-decoded symbols feed the fused consumer in place
+(no uncompressed-plane upload).  Decode keys off the container, not the
+config's coder: any blob with ``HUFF`` chunks qualifies, other blobs
+silently stay host-side.  ``decompress_array`` / ``delta_decompress``
+additionally take ``device_resident=True`` to keep the restored leaf on
+device as a ``jax.Array`` (zero device→host bounce — the
+``shard_restore`` path).  Decoded bits are identical across
+``backend`` × ``entropy_backend`` × ``threads`` everywhere.
 """
 
 from __future__ import annotations
@@ -282,27 +295,93 @@ def _resolve_decode_backend(
     return device_unplane.resolve(requested, layout, base=base)
 
 
+def _resolve_decode_entropy(
+    entropy_backend: Optional[str],
+    backend: Optional[str],
+    config: ZipNNConfig,
+    chunk_bytes: int,
+    base: Any = None,
+) -> str:
+    """Collapse the decode-side entropy knob to 'host' or 'device'.
+
+    Same precedence as the encode side (:func:`_resolve_entropy_backend`):
+    explicit argument, then the config field, then the plane ``backend``
+    request.  The envelope differs — decode keys off the *container's*
+    chunk geometry, not the config's coder, and ``auto`` keys off
+    accelerator attachment (or a device-resident delta base) — see
+    :func:`repro.core.device_entropy.resolve_decode`.
+    """
+    requested = entropy_backend
+    if requested is None:
+        requested = config.entropy_backend
+    if requested is None:
+        requested = config.plane_backend if backend is None else backend
+    if requested == "host":
+        return "host"
+    from . import device_entropy  # lazy: pulls in jax/Pallas
+
+    return device_entropy.resolve_decode(requested, chunk_bytes, base=base)
+
+
 def _entropy_decode(
-    blob: bytes, config: ZipNNConfig, pool
-) -> Tuple[bitlayout.BitLayout, List[np.ndarray], bytes]:
+    blob: bytes,
+    config: ZipNNConfig,
+    pool,
+    entropy_backend: Optional[str] = None,
+    backend: Optional[str] = None,
+    base: Any = None,
+    device_resident: Optional[bool] = None,
+) -> Tuple[bitlayout.BitLayout, List[Any], bytes]:
     """Shared front half of every decompression path: parse the container
     and entropy-decode every (plane, chunk) payload (CRC-verified work
     items fanned across ``pool``).  Returns ``(layout, planes, tail)`` —
-    the byte-group planes still await un-grouping by either backend."""
+    the byte-group planes still await un-grouping by either backend.
+
+    ``entropy_backend``/``backend`` are the unresolved decode knobs: the
+    fused device decoder (:func:`repro.core.device_entropy.decode_planes`)
+    engages only when the parsed stream actually has ``HUFF`` chunks and
+    the resolution lands on device; everything else (and every fallback)
+    decodes through the host work items — bytes identical either way.
+    ``device_resident`` asks the device decoder for device-resident plane
+    arrays; ``None`` decides from the un-plane backend resolution, so
+    kernel-decoded symbols stay on device exactly when the fused consumer
+    will eat them in place.
+    """
     meta, mv = container.unpack_stream(blob)
     layout = bitlayout.layout_by_name(meta.layout_name)
     params = codec.CodecParams(chunk_bytes=meta.chunk_bytes, backend=config.backend)
-    planes = []
-    for p in range(meta.n_planes):
-        payload_list = [
+    payload_lists = [
+        [
             container.payload_view(meta, mv, p, c)
             for c in range(len(meta.entries[p]))
         ]
-        planes.append(
-            codec.decompress_plane(
-                meta.entries[p], payload_list, meta.tables[p], params, pool=pool
+        for p in range(meta.n_planes)
+    ]
+    use_device = any(
+        e.method == codec.Method.HUFF for pe in meta.entries for e in pe
+    ) and _resolve_decode_entropy(
+        entropy_backend, backend, config, meta.chunk_bytes, base=base
+    ) == "device"
+    if use_device:
+        from . import device_entropy
+
+        if device_resident is None:
+            device_resident = (
+                _resolve_decode_backend(backend, config, layout, base=base)
+                == "device"
             )
+        planes = device_entropy.decode_planes(
+            meta.entries, payload_lists, meta.tables, params,
+            pool=pool, device_resident=device_resident,
         )
+    else:
+        planes = [
+            codec.decompress_plane(
+                meta.entries[p], payload_lists[p], meta.tables[p], params,
+                pool=pool,
+            )
+            for p in range(meta.n_planes)
+        ]
     # trailing unaligned bytes
     end = meta.payload_base + sum(
         e.comp_len for pe in meta.entries for e in pe
@@ -317,10 +396,13 @@ def decompress_bytes(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> bytes:
     """Decompress one ZNN1 blob back to its raw little-endian byte stream."""
     pool = engine.get_pool(config.threads if threads is None else threads)
-    layout, planes, tail = _entropy_decode(blob, config, pool)
+    layout, planes, tail = _entropy_decode(
+        blob, config, pool, entropy_backend=entropy_backend, backend=backend
+    )
     if (
         planes
         and planes[0].size
@@ -408,14 +490,75 @@ def _np_dtype(name: str) -> np.dtype:
     return np.dtype(getattr(ml_dtypes, name, name))
 
 
+def _decompress_array_device(
+    ct: CompressedTensor,
+    config: ZipNNConfig,
+    threads: Optional[int],
+    backend: Optional[str],
+    entropy_backend: Optional[str],
+) -> Optional[Any]:
+    """Zero-bounce restore of one leaf: decode on device, stay on device.
+
+    Returns a device-resident ``jax.Array`` (real dtype, real shape) built
+    by bitcasting the fused consumer's element output in place — no
+    ``device_get``, and with the device entropy stage only the *compressed*
+    payload crosses host→device.  Returns ``None`` whenever any part of
+    the leaf rides the host path (unsupported layout, empty leaf, tail
+    bytes, host-resolved plane backend) — the caller falls back to the
+    ordinary numpy restore.
+    """
+    layout = bitlayout.LAYOUTS.get(ct.dtype)
+    if layout is None or not int(np.prod(ct.shape, dtype=np.int64)):
+        return None
+    if _resolve_decode_backend(backend, config, layout) != "device":
+        return None
+    pool = engine.get_pool(config.threads if threads is None else threads)
+    blob_layout, planes, tail = _entropy_decode(
+        ct.blob, config, pool,
+        entropy_backend=entropy_backend, backend=backend,
+        device_resident=True,
+    )
+    if tail or blob_layout.name != layout.name or not planes or not planes[0].size:
+        return None                        # edge cases ride the host path
+    import jax
+    import jax.numpy as jnp
+
+    from . import device_unplane
+
+    elems = device_unplane.consume_planes(
+        planes, layout, device_resident=True
+    )
+    return jax.lax.bitcast_convert_type(
+        elems, jnp.dtype(_np_dtype(ct.dtype))
+    ).reshape(ct.shape)
+
+
 def decompress_array(
     ct: CompressedTensor,
     config: ZipNNConfig = DEFAULT,
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
-) -> np.ndarray:
-    raw = decompress_bytes(ct.blob, config, threads=threads, backend=backend)
+    entropy_backend: Optional[str] = None,
+    device_resident: bool = False,
+) -> Any:
+    """Decompress one leaf back to its dtype/shape.
+
+    Returns numpy by default.  ``device_resident=True`` keeps the restored
+    leaf on device as a ``jax.Array`` when the decode backend resolves to
+    device (see :func:`_decompress_array_device`) — bits identical, zero
+    device→host bounce; host-resolved leaves still come back as numpy.
+    """
+    if device_resident:
+        out = _decompress_array_device(
+            ct, config, threads, backend, entropy_backend
+        )
+        if out is not None:
+            return out
+    raw = decompress_bytes(
+        ct.blob, config, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
+    )
     return np.frombuffer(raw, dtype=_np_dtype(ct.dtype)).reshape(ct.shape).copy()
 
 
@@ -499,15 +642,18 @@ def decompress_pytree(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
 ) -> Any:
     """Decompress every leaf of a :func:`compress_pytree` manifest.
 
     With the device backend, same-layout leaves are decoded through
     **batched multi-leaf dispatches** (see :mod:`.device_unplane`): each
-    leaf's planes are entropy-decoded host-side (chunk work items on the
-    engine pool), then one upload + one fused kernel launch + one transfer
-    reconstruct the whole group.  Decoded arrays are bit-identical to
-    decompressing each leaf alone on either backend.
+    leaf's planes are entropy-decoded (host chunk work items, or the device
+    Huffman decoder kernel under ``entropy_backend``), then one fused
+    kernel launch + one transfer reconstruct the whole group.  With the
+    device entropy stage the decoded planes are already device-resident,
+    so only compressed bytes cross host→device.  Decoded arrays are
+    bit-identical to decompressing each leaf alone on any backend combo.
     """
     import jax
 
@@ -549,7 +695,10 @@ def decompress_pytree(
                 win_planes.clear()
 
             for i in idxs:
-                blob_layout, planes, tail = _entropy_decode(cts[i].blob, config, pool)
+                blob_layout, planes, tail = _entropy_decode(
+                    cts[i].blob, config, pool,
+                    entropy_backend=entropy_backend, backend=backend,
+                )
                 if (
                     tail
                     or blob_layout.name != layout.name
@@ -568,8 +717,15 @@ def decompress_pytree(
 
     for i, ct in enumerate(cts):
         if arrays[i] is None:
-            # zipnn: allow(knob-redefault): leaves the device batch skipped decode on the host path by design (blobs are byte-identical either way)
-            arrays[i] = decompress_array(ct, config, threads=threads, backend="host")
+            # Leaves the device batch skipped decode host-planed, but a
+            # 'device'/'auto' request still covers their entropy stage.
+            # zipnn: allow(knob-redefault): leaves the device batch skipped decode on the host plane path by design (blobs are byte-identical either way); mixed mode keeps the requested entropy backend
+            arrays[i] = decompress_array(
+                ct, config, threads=threads, backend="host",
+                entropy_backend=(
+                    entropy_backend if entropy_backend is not None else backend
+                ),
+            )
     return jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
 
 
@@ -714,15 +870,22 @@ def delta_decompress(
     *,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
-) -> np.ndarray:
+    entropy_backend: Optional[str] = None,
+    device_resident: bool = False,
+) -> Any:
     """Invert :func:`delta_compress`: decode the delta stream and XOR it
     with ``base``.
 
     On the device backend the inverse XOR is fused into the plane-consumer
-    dispatch (see :mod:`.device_unplane`): the decoded planes upload once,
-    un-group + inverse-rotate + XOR run on device against the base at its
-    device residence, and only the reconstructed tensor bytes come back —
-    the delta stream never materializes host-side.
+    dispatch (see :mod:`.device_unplane`): the decoded planes upload once
+    (or, under the device entropy stage, are already device-resident —
+    only compressed bytes cross host→device), un-group + inverse-rotate +
+    XOR run on device against the base at its device residence, and only
+    the reconstructed tensor bytes come back — the delta stream never
+    materializes host-side.  ``device_resident=True`` additionally keeps
+    the restored tensor on device as a ``jax.Array`` (zero device→host
+    bounce) when the decode backend resolves to device; host-resolved
+    decodes still return numpy.
     """
     layout = bitlayout.LAYOUTS.get(getattr(getattr(base, "dtype", None), "name", ""))
     if (
@@ -731,7 +894,10 @@ def delta_decompress(
         and _resolve_decode_backend(backend, config, layout, base=base) == "device"
     ):
         pool = engine.get_pool(config.threads if threads is None else threads)
-        blob_layout, planes, tail = _entropy_decode(ct.blob, config, pool)
+        blob_layout, planes, tail = _entropy_decode(
+            ct.blob, config, pool,
+            entropy_backend=entropy_backend, backend=backend, base=base,
+        )
         if (
             not tail
             and blob_layout.name == layout.name
@@ -740,6 +906,16 @@ def delta_decompress(
         ):
             from . import device_unplane
 
+            if device_resident:
+                import jax
+                import jax.numpy as jnp
+
+                elems = device_unplane.consume_planes(
+                    planes, layout, base=base, device_resident=True
+                )
+                return jax.lax.bitcast_convert_type(
+                    elems, jnp.dtype(_np_dtype(ct.dtype))
+                ).reshape(ct.shape)
             raw = device_unplane.consume_planes(planes, layout, base=base)
             return (
                 np.frombuffer(raw.tobytes(), dtype=_np_dtype(ct.dtype))
@@ -748,8 +924,13 @@ def delta_decompress(
             )
     b = _to_numpy(base)
     x = np.frombuffer(
-        # zipnn: allow(knob-redefault): delta XOR happens host-side here, so the plane decode is pinned to host; device delta decode goes through decompress_pytree
-        decompress_bytes(ct.blob, config, threads=threads, backend="host"),
+        # zipnn: allow(knob-redefault): delta XOR happens host-side here, so the plane decode is pinned to host; device delta decode goes through decompress_pytree. The entropy stage still follows the request.
+        decompress_bytes(
+            ct.blob, config, threads=threads, backend="host",
+            entropy_backend=(
+                entropy_backend if entropy_backend is not None else backend
+            ),
+        ),
         dtype=np.uint8,
     )
     raw = np.bitwise_xor(x, b.reshape(-1).view(np.uint8))

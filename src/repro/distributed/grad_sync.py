@@ -81,12 +81,15 @@ class GradSync:
         return manifest, WireStats(manifest["raw_bytes"], manifest["comp_bytes"], dt)
 
     def unpack(self, manifest: Dict[str, Any]) -> PyTree:
-        # The receive side uses the same backend knob: with 'device'/'auto'
-        # the decoded planes upload once and un-group + inverse rotate run
-        # as fused dispatches (core/device_unplane.py), batched across
-        # same-layout leaves — bytes identical to the host path.
+        # The receive side uses the same knobs: with 'device'/'auto' the
+        # entropy stage can decode through the device Huffman kernel
+        # (core/device_entropy.py — only compressed bytes cross host→device)
+        # and un-group + inverse rotate run as fused dispatches
+        # (core/device_unplane.py), batched across same-layout leaves —
+        # bytes identical to the host path.
         return zipnn.decompress_pytree(
-            manifest, self.config, threads=self.threads, backend=self.backend
+            manifest, self.config, threads=self.threads, backend=self.backend,
+            entropy_backend=self.entropy_backend,
         )
 
     def exchange(

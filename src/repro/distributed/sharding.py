@@ -212,6 +212,12 @@ def device_put_tree(tree: Any, mesh, specs: Any) -> Any:
     where it is).  This is the shard-restore back half shared by
     ``checkpoint.manager.CheckpointManager.shard_restore`` and any elastic
     rescale path: the saved layout never constrains the restored one.
+
+    Leaves may be host numpy arrays *or* already device-resident
+    ``jax.Array``\\ s (the zero-bounce restore path: device-decoded leaves
+    arrive here without ever touching host memory) — ``jax.device_put``
+    re-shards a device-resident leaf device-to-device, so the compressed
+    payload remains the only host→device transfer of the whole restore.
     """
     from jax.sharding import NamedSharding
 

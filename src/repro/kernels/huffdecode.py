@@ -1,0 +1,146 @@
+"""Multi-table canonical Huffman *decode* kernel (device entropy stage).
+
+Inverse of :mod:`repro.kernels.bitpack`: the encode kernel packs MSB-first
+canonical codes into uint32 words (bit ``j`` of the chunk at word bit
+``31 - j``); this kernel walks that bitstream back to symbols.  The
+schedule is the paper's §5.1 chunk-level parallelism exactly as
+``huffman.decode_many`` expresses it on the host — chunks are mutually
+independent, so the grid runs one program per HUFF chunk in lockstep,
+while *within* a chunk the decode is inherently serial (symbol ``i+1``'s
+bit position depends on symbol ``i``'s code length) and runs as a
+``fori_loop`` over the chunk's symbol count:
+
+* one fused ``(symbol << 8) | length`` LUT gather per symbol (the same
+  16-bit trick as the host decoder's ``lut16``), against a per-chunk row
+  of the stacked per-plane tables — multi-table selection mirroring
+  ``bitpack_encode_chunks_multi``, so all planes of a tensor decode in
+  one launch;
+* a per-chunk bit cursor advanced by the gathered code length; the final
+  cursor is emitted so the host can apply the same integrity check as
+  ``decode_many`` (a valid chunk's cursor lands inside its final byte,
+  0-7 zero pad bits of slack);
+* word gathers are index-clamped to the chunk's word block, so corrupt or
+  truncated payloads decode garbage that the host-side cursor check then
+  rejects — never an out-of-bounds gather.
+
+Symbols land device-resident: the driver
+(:func:`repro.core.device_entropy.decode_planes`) can feed them straight
+into the fused un-byte-group dispatch without a host bounce.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["MAXL", "huffdecode_chunks_multi"]
+
+MAXL = 15                      # same cap as the encoder / length-limited tables
+
+
+def _decode_block(words, lut_row, count, syms_ref, cursor_ref):
+    """Serial bit-cursor decode of one chunk's packed words.
+
+    ``words``: ``(chunk_bytes // 4,)`` uint32 block (encode-kernel bit
+    convention: bit ``j`` of the chunk at word bit ``31 - j``).
+    ``lut_row``: ``(1 << lut_bits,)`` fused ``(sym << 8) | len`` LUT.
+    Writes ``count`` symbols and the final bit cursor.
+    """
+    nwords = words.shape[0]
+    lut_bits = lut_row.shape[0].bit_length() - 1    # LUT size is 1 << lut_bits
+    out_shift = jnp.uint32(32 - lut_bits)
+
+    def body(i, bitpos):
+        # Bits [bitpos, bitpos + lut_bits) straddle at most two words.  The
+        # indices are clamped so a runaway cursor (corrupt payload) reads
+        # in-range garbage; the host rejects it via the cursor check.
+        w0 = jnp.minimum(bitpos >> 5, nwords - 1)
+        w1 = jnp.minimum(w0 + 1, nwords - 1)
+        o = (bitpos & 31).astype(jnp.uint32)
+        a = jax.lax.dynamic_index_in_dim(words, w0, 0, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(words, w1, 0, keepdims=False)
+        # (a << o) keeps the window's first bit at the MSB; the second word
+        # contributes its top o bits.  The double shift (>> 1 >> (31 - o))
+        # stays defined at o == 0, where a single >> 32 would not be.
+        win = ((a << o) | ((b >> jnp.uint32(1)) >> (jnp.uint32(31) - o)))
+        v = jax.lax.dynamic_index_in_dim(
+            lut_row, (win >> out_shift).astype(jnp.int32), 0, keepdims=False
+        )
+        syms_ref[pl.ds(i, 1)] = ((v >> 8).astype(jnp.uint8)).reshape(1)
+        return bitpos + (v & 0xFF)
+
+    final = jax.lax.fori_loop(0, count, body, jnp.int32(0))
+    # Clamp for reporting only: a live cursor never exceeds the block (the
+    # expansion guard keeps valid payloads under chunk_bytes), so the clamp
+    # only tames corrupt streams — which the host then rejects.
+    cursor_ref[0] = jnp.minimum(final, nwords * 32)
+
+
+def _huffdecode_multi_kernel(pid_ref, count_ref, lut_ref, words_ref,
+                             syms_ref, cursor_ref):
+    pid = pid_ref[0]
+    lut_row = jax.lax.dynamic_index_in_dim(
+        lut_ref[...], pid, axis=0, keepdims=False
+    )
+    _decode_block(words_ref[...], lut_row, count_ref[0], syms_ref, cursor_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk_bytes", "interpret"))
+def huffdecode_chunks_multi(
+    words: jax.Array,
+    plane_ids: jax.Array,
+    counts: jax.Array,
+    lut16_tables: jax.Array,
+    *,
+    chunk_bytes: int,
+    interpret: bool = True,
+):
+    """Decode many packed HUFF chunks against stacked per-plane LUTs.
+
+    ``words``        — ``(c * (chunk_bytes // 4),)`` uint32: each chunk's
+                       payload bytes as big-endian words, zero-padded to the
+                       ``chunk_bytes`` capacity (valid HUFF payloads are
+                       always shorter — the expansion guard stores larger
+                       chunks raw).
+    ``plane_ids``    — ``(c,)`` row of ``lut16_tables`` per chunk.
+    ``counts``       — ``(c,)`` symbols to decode per chunk (its raw length).
+    ``lut16_tables`` — ``(p, 1 << lut_bits)`` fused ``(sym << 8) | len``
+                       canonical LUTs, one row per plane, built at a shared
+                       ``lut_bits`` ≥ every table's max code length.
+
+    Returns ``(syms, cursors)``: ``(c, chunk_bytes)`` uint8 decoded symbols
+    (entries past ``counts[k]`` are unspecified) and ``(c,)`` int32 final
+    bit cursors for the host-side integrity check.
+    """
+    cw = chunk_bytes // 4
+    c = words.shape[0] // cw
+    p = lut16_tables.shape[0]
+    lut_n = lut16_tables.shape[1]
+    syms, cursors = pl.pallas_call(
+        _huffdecode_multi_kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((p, lut_n), lambda i: (0, 0)),
+            pl.BlockSpec((cw,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((chunk_bytes,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c * chunk_bytes,), jnp.uint8),
+            jax.ShapeDtypeStruct((c,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        plane_ids.astype(jnp.int32),
+        counts.astype(jnp.int32),
+        lut16_tables.astype(jnp.int32),
+        words,
+    )
+    return syms.reshape(c, chunk_bytes), cursors

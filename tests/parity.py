@@ -119,6 +119,15 @@ def assert_decode_parity(
             assert out == raw, (
                 f"decode backend {be!r} × threads={t} not bit-exact [{label}]"
             )
+            # Device entropy decode (fused Huffman decoder kernel; host
+            # fallback off the canonical envelope) must be bit-exact too.
+            out = zipnn.decompress_bytes(
+                ref, cfg, threads=t, backend=be, entropy_backend=be
+            )
+            assert out == raw, (
+                f"decode entropy backend {be!r} × threads={t} not bit-exact "
+                f"[{label}]"
+            )
     return ref
 
 
@@ -150,6 +159,13 @@ def assert_delta_parity(
             assert as_bytes(back) == want, (
                 f"delta decode backend {be!r} × threads={t} not bit-exact "
                 f"[{label}]"
+            )
+            back = zipnn.delta_decompress(
+                ref, base, cfg, threads=t, backend=be, entropy_backend=be
+            )
+            assert as_bytes(back) == want, (
+                f"delta decode entropy backend {be!r} × threads={t} not "
+                f"bit-exact [{label}]"
             )
     return ref
 
@@ -287,6 +303,8 @@ def check_golden(
                 for t in threads:
                     out = zipnn.decompress_bytes(blob, cfg, threads=t, backend=be)
                     assert out == raw, f"{label} decode {be}×{t} != frozen raw"
+            out = zipnn.decompress_bytes(blob, cfg, entropy_backend="device")
+            assert out == raw, f"{label} device-entropy decode != frozen raw"
             re = zipnn.compress_bytes(raw, fx["dtype"], cfg)
             assert re == blob, f"{label} re-encode != frozen blob"
             re = zipnn.compress_bytes(raw, fx["dtype"], cfg, entropy_backend="device")
@@ -303,6 +321,10 @@ def check_golden(
                     assert as_bytes(back) == raw, (
                         f"{label} decode {be}×{t} != frozen raw"
                     )
+            back = zipnn.delta_decompress(ct, base, cfg, entropy_backend="device")
+            assert as_bytes(back) == raw, (
+                f"{label} device-entropy decode != frozen raw"
+            )
             re = zipnn.delta_compress(new, base, cfg)
             assert re.blob == blob, f"{label} re-encode != frozen blob"
             re = zipnn.delta_compress(new, base, cfg, entropy_backend="device")
@@ -317,6 +339,10 @@ def check_golden(
                         io.BytesIO(blob), cfg, threads=t, backend=be
                     )
                     assert r.read() == raw, f"{label} decode {be}×{t} != frozen raw"
+            r = engine.DecompressReader(
+                io.BytesIO(blob), cfg, entropy_backend="device"
+            )
+            assert r.read() == raw, f"{label} device-entropy decode != frozen raw"
             sink = io.BytesIO()
             with engine.CompressWriter(
                 sink, fx["dtype"], cfg, window_bytes=fx["window_bytes"]

@@ -1,0 +1,445 @@
+"""Device entropy-decode backend (core/device_entropy.decode_planes +
+kernels/huffdecode.py) and the zero-bounce decode pipeline.
+
+Contract under test: every ``HUFF`` chunk of a canonical-coder container
+decodes on device **bit-identically** to ``huffman.decode_many`` / the
+host codec — across tables, chunk sizes, final partial chunks, and
+``STORE``/``ZERO``/expansion-guard mixes — and corrupt payloads fail
+cleanly (CRC / bit-cursor / pad-bit errors, never an out-of-bounds
+gather).  The device-resident path feeds kernel-decoded symbols straight
+into the fused un-plane consumer so restored leaves never bounce through
+host memory.
+"""
+
+import dataclasses
+import io
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import codec, device_entropy, engine, huffman, zipnn
+from parity import make_array
+
+HUFF_CFG = zipnn.ZipNNConfig(chunk_param_bytes=1 << 15, backend="huffman")
+
+
+def _skewed_plane(n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    p = np.r_[np.full(16, 0.05), np.full(240, 0.2 / 240)]
+    return rng.choice(256, p=p, size=n).astype(np.uint8)
+
+
+def _table_for(plane: np.ndarray) -> np.ndarray:
+    return huffman.code_lengths(np.bincount(plane, minlength=256) + 1)
+
+
+def _chunk(plane: np.ndarray, chunk_bytes: int):
+    return [
+        plane[o : o + chunk_bytes] for o in range(0, plane.size, chunk_bytes)
+    ]
+
+
+def _pack_words(payloads, chunk_bytes: int) -> np.ndarray:
+    """Payloads → the kernel's per-chunk big-endian uint32 word lanes."""
+    cw = chunk_bytes // 4
+    words = np.zeros(len(payloads) * cw, dtype=np.uint32)
+    for k, pay in enumerate(payloads):
+        pad = -len(pay) % 4
+        w = np.frombuffer(bytes(pay) + b"\x00" * pad, dtype=">u4")
+        words[k * cw : k * cw + w.size] = w
+    return words
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: fused decode vs the lockstep host decoder
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_bytes", [4096, 16384])
+@pytest.mark.parametrize(
+    "n", [4096, 16384 * 3, 16384 * 2 + 5_001, 1 << 15]
+)  # whole chunks, multi-chunk, final partial chunk
+def test_kernel_matches_decode_many(chunk_bytes, n):
+    import jax.numpy as jnp
+
+    from repro.kernels import huffdecode
+
+    plane = _skewed_plane(n, seed=chunk_bytes + n)
+    lens = _table_for(plane)
+    codes = huffman.canonical_codes(lens)
+    chunks = _chunk(plane, chunk_bytes)
+    counts = np.asarray([c.size for c in chunks], dtype=np.int64)
+    payloads = huffman.encode_chunks(plane, counts, lens, codes)
+    want = huffman.decode_many(payloads, counts, lens)
+
+    max_l = int(lens.max(initial=1))
+    lut_sym, lut_len = huffman._build_lut(lens, codes, max_l)
+    luts = ((lut_sym.astype(np.int32) << 8) | lut_len.astype(np.int32))[None, :]
+    syms, cursors = huffdecode.huffdecode_chunks_multi(
+        jnp.asarray(_pack_words(payloads, chunk_bytes)),
+        jnp.zeros(len(chunks), jnp.int32),
+        jnp.asarray(counts, dtype=jnp.int32),
+        jnp.asarray(luts),
+        chunk_bytes=chunk_bytes,
+    )
+    syms = np.asarray(syms)
+    cursors = np.asarray(cursors)
+    for k, w in enumerate(want):
+        assert np.array_equal(syms[k, : counts[k]], w)
+        # the bit cursor must land inside the final payload byte
+        slack = 8 * len(payloads[k]) - int(cursors[k])
+        assert 0 <= slack < 8
+
+
+def test_kernel_multi_table_selection():
+    """Chunks of different planes gather against their own LUT row at the
+    shared stacked width."""
+    import jax.numpy as jnp
+
+    from repro.kernels import huffdecode
+
+    cb = 4096
+    planes = [
+        _skewed_plane(cb * 2 + 777, seed=1),
+        (np.arange(cb * 3) % 7).astype(np.uint8),      # much shorter codes
+    ]
+    tabs = [_table_for(p) for p in planes]
+    all_payloads, all_counts, pids, want = [], [], [], []
+    for p, (plane, lens) in enumerate(zip(planes, tabs)):
+        codes = huffman.canonical_codes(lens)
+        chunks = _chunk(plane, cb)
+        counts = np.asarray([c.size for c in chunks], dtype=np.int64)
+        payloads = huffman.encode_chunks(plane, counts, lens, codes)
+        want += huffman.decode_many(payloads, counts, lens)
+        all_payloads += payloads
+        all_counts += counts.tolist()
+        pids += [p] * len(chunks)
+
+    max_l = max(int(t.max(initial=1)) for t in tabs)
+    luts = np.zeros((len(tabs), 1 << max_l), dtype=np.int32)
+    for p, lens in enumerate(tabs):
+        ls, ll = huffman._build_lut(lens, huffman.canonical_codes(lens), max_l)
+        luts[p] = (ls.astype(np.int32) << 8) | ll.astype(np.int32)
+    syms, _ = huffdecode.huffdecode_chunks_multi(
+        jnp.asarray(_pack_words(all_payloads, cb)),
+        jnp.asarray(pids, dtype=jnp.int32),
+        jnp.asarray(all_counts, dtype=jnp.int32),
+        jnp.asarray(luts),
+        chunk_bytes=cb,
+    )
+    syms = np.asarray(syms)
+    for k, w in enumerate(want):
+        assert np.array_equal(syms[k, : len(w)], w)
+
+
+def test_kernel_truncated_words_never_oob():
+    """A payload cut short mis-lands the bit cursor; the clamped gathers
+    keep the kernel in bounds and the driver-level check catches it."""
+    import jax.numpy as jnp
+
+    from repro.kernels import huffdecode
+
+    cb = 4096
+    plane = _skewed_plane(cb, seed=7)
+    lens = _table_for(plane)
+    codes = huffman.canonical_codes(lens)
+    payloads = huffman.encode_chunks(plane, np.asarray([cb]), lens, codes)
+    cut = payloads[0][: len(payloads[0]) // 2]     # truncate: cursor overruns
+    max_l = int(lens.max(initial=1))
+    ls, ll = huffman._build_lut(lens, codes, max_l)
+    luts = ((ls.astype(np.int32) << 8) | ll.astype(np.int32))[None, :]
+    syms, cursors = huffdecode.huffdecode_chunks_multi(
+        jnp.asarray(_pack_words([cut], cb)),
+        jnp.zeros(1, jnp.int32),
+        jnp.asarray([cb], dtype=jnp.int32),
+        jnp.asarray(luts),
+        chunk_bytes=cb,
+    )
+    # no crash/OOB; the cursor demonstrably ran past the truncated payload
+    assert int(np.asarray(cursors)[0]) > 8 * len(cut) - 8
+    assert np.asarray(syms).shape == (1, cb)
+
+
+# ---------------------------------------------------------------------------
+# decode_many hardening (host twin of the kernel's integrity checks)
+# ---------------------------------------------------------------------------
+
+def test_decode_many_rejects_nonzero_pad_bits():
+    # find a stream whose final byte has pad slack, then dirty the pad
+    for n in range(2048, 2080):
+        plane = _skewed_plane(n, seed=3)
+        lens = _table_for(plane)
+        codes = huffman.canonical_codes(lens)
+        payloads = huffman.encode_chunks(
+            plane, np.asarray([plane.size]), lens, codes
+        )
+        assert np.array_equal(
+            huffman.decode_many(payloads, [plane.size], lens)[0], plane
+        )
+        total_bits = int(huffman.estimate_encoded_bits(
+            np.bincount(plane, minlength=256), lens
+        ))
+        slack = 8 * len(payloads[0]) - total_bits
+        if 0 < slack < 8:
+            break
+    else:
+        pytest.fail("no padded tail found in the sweep")
+    bad = payloads[0][:-1] + bytes([payloads[0][-1] | 1])
+    with pytest.raises(ValueError, match="pad bits"):
+        huffman.decode_many([bad], [plane.size], lens)
+
+
+def test_decode_many_rejects_tampered_count():
+    plane = _skewed_plane(2048, seed=4)
+    lens = _table_for(plane)
+    codes = huffman.canonical_codes(lens)
+    payloads = huffman.encode_chunks(plane, np.asarray([plane.size]), lens, codes)
+    with pytest.raises(ValueError):
+        huffman.decode_many(payloads, [plane.size - 100], lens)
+
+
+# ---------------------------------------------------------------------------
+# decode_planes: driver parity + corruption fuzz
+# ---------------------------------------------------------------------------
+
+def _compress_plane_all(planes, params):
+    outs = [codec.compress_plane(p, params) for p in planes]
+    return (
+        [o[0] for o in outs],
+        [o[1] for o in outs],
+        [o[2] for o in outs],
+    )
+
+
+def _mixed_planes(cb):
+    """STORE (incompressible), ZERO, HUFF, and a final partial chunk."""
+    rng = np.random.default_rng(11)
+    return [
+        np.concatenate([
+            rng.integers(0, 256, cb, dtype=np.uint8).astype(np.uint8),  # STORE
+            np.zeros(cb, dtype=np.uint8),                               # ZERO
+            _skewed_plane(cb + cb // 3, seed=5),                        # HUFF+partial
+        ]),
+        _skewed_plane(2 * cb, seed=6),
+    ]
+
+
+@pytest.mark.parametrize("device_resident", [False, True])
+def test_decode_planes_matches_host_codec(device_resident):
+    cb = 4096
+    params = codec.CodecParams(chunk_bytes=cb, backend="huffman")
+    planes = _mixed_planes(cb)
+    entries, payloads, tables = _compress_plane_all(planes, params)
+    methods = {e.method for pe in entries for e in pe}
+    assert codec.Method.HUFF in methods and codec.Method.STORE in methods
+    got = device_entropy.decode_planes(
+        entries, payloads, tables, params, device_resident=device_resident
+    )
+    for g, p in zip(got, planes):
+        if device_resident:
+            assert not isinstance(g, np.ndarray)
+        assert np.array_equal(np.asarray(g), p)
+
+
+def test_decode_planes_expansion_guard_mix():
+    """Chunks the encoder's expansion guard stored raw splice back in."""
+    cb = 4096
+    params = codec.CodecParams(
+        chunk_bytes=cb, backend="huffman", incompressible=1.1
+    )  # force the probe to plan HUFF even on random bytes → guard trips
+    rng = np.random.default_rng(12)
+    plane = np.concatenate([
+        rng.integers(0, 256, cb, dtype=np.uint8).astype(np.uint8),
+        _skewed_plane(cb, seed=13),
+    ])
+    entries, payloads, tables = _compress_plane_all([plane], params)
+    assert any(e.method == codec.Method.STORE for e in entries[0])
+    got = device_entropy.decode_planes(entries, payloads, tables, params)
+    assert np.array_equal(np.asarray(got[0]), plane)
+
+
+def test_decode_planes_corruption_rejected():
+    cb = 4096
+    params = codec.CodecParams(chunk_bytes=cb, backend="huffman")
+    plane = _skewed_plane(2 * cb, seed=8)
+    entries, payloads, tables = _compress_plane_all([plane], params)
+    assert entries[0][0].method == codec.Method.HUFF
+
+    # flipped byte → CRC error (same message as the host codec)
+    bad = [bytearray(p) for p in payloads[0]]
+    bad[0][3] ^= 0xFF
+    with pytest.raises(IOError, match="CRC mismatch"):
+        device_entropy.decode_planes(
+            [entries[0]], [[bytes(b) for b in bad]], tables, params
+        )
+
+    # truncated payload with a recomputed CRC → bit-cursor integrity error
+    import zlib
+
+    cut = bytes(payloads[0][0][: entries[0][0].comp_len // 2])
+    e0 = dataclasses.replace(
+        entries[0][0], comp_len=len(cut), crc=zlib.crc32(cut)
+    )
+    with pytest.raises(ValueError, match="cursor|pad bits"):
+        device_entropy.decode_planes(
+            [[e0] + entries[0][1:]], [[cut] + payloads[0][1:]], tables, params
+        )
+
+    # nonzero pad bits with a recomputed CRC → pad integrity error
+    p0 = bytes(payloads[0][0])
+    dirty = p0[:-1] + bytes([p0[-1] | 1])
+    slack = -huffman.estimate_encoded_bits(
+        np.bincount(plane[:cb], minlength=256),
+        huffman.unpack_table(tables[0]),
+    ) % 8
+    if slack:                     # only meaningful when the tail is padded
+        e0 = dataclasses.replace(entries[0][0], crc=zlib.crc32(dirty))
+        with pytest.raises(ValueError, match="pad bits"):
+            device_entropy.decode_planes(
+                [[e0] + entries[0][1:]], [[dirty] + payloads[0][1:]],
+                tables, params,
+            )
+
+    # missing table → same corrupt-stream error as the host codec
+    with pytest.raises(IOError, match="no plane table"):
+        device_entropy.decode_planes([entries[0]], [payloads[0]], [None], params)
+
+
+def test_decode_envelope():
+    assert device_entropy.supports_decode(4096) == device_entropy.is_available()
+    assert not device_entropy.supports_decode(4097)
+    assert device_entropy.resolve_decode(None, 4096) == "host"
+    assert device_entropy.resolve_decode("host", 4096) == "host"
+    assert device_entropy.resolve_decode("device", 4097) == "host"
+    if device_entropy.is_available():
+        assert device_entropy.resolve_decode("device", 4096) == "device"
+    with pytest.raises(ValueError, match="unknown entropy backend"):
+        device_entropy.resolve_decode("gpu", 4096)
+
+
+def test_consume_payloads_zero_bounce():
+    import jax
+
+    from repro.core import bitlayout, device_unplane
+
+    layout = bitlayout.LAYOUTS["float32"]
+    arr = make_array("float32", 50_000, seed=21)
+    cb = HUFF_CFG.plane_params(layout.itemsize).chunk_bytes
+    params = codec.CodecParams(chunk_bytes=cb, backend="huffman")
+    planes = [np.ascontiguousarray(p) for p in bitlayout.to_planes(
+        np.frombuffer(arr.tobytes(), dtype=np.uint8), layout
+    )]
+    entries, payloads, tables = _compress_plane_all(planes, params)
+    elems = device_unplane.consume_payloads(
+        entries, payloads, tables, params, layout, device_resident=True
+    )
+    assert isinstance(elems, jax.Array)
+    got = np.asarray(jax.device_get(elems)).view(np.float32)
+    assert np.array_equal(got, arr.reshape(-1))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the entropy_backend knob across the decode surface
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ["bfloat16", "float32"])
+def test_decompress_bytes_parity(dtype):
+    raw = make_array(dtype, 60_001, seed=31).tobytes()
+    blob = zipnn.compress_bytes(raw, dtype, HUFF_CFG)
+    for backend in (None, "device"):
+        assert zipnn.decompress_bytes(
+            blob, HUFF_CFG, backend=backend, entropy_backend="device"
+        ) == raw
+    # config-field route
+    cfg = dataclasses.replace(HUFF_CFG, entropy_backend="device")
+    assert zipnn.decompress_bytes(blob, cfg) == raw
+
+
+def test_decompress_array_device_resident():
+    arr = make_array("float32", 40_001, seed=32)
+    ct = zipnn.compress_array(arr, HUFF_CFG)
+    host = zipnn.decompress_array(ct, HUFF_CFG)
+    dev = zipnn.decompress_array(
+        ct, HUFF_CFG, backend="device", entropy_backend="device",
+        device_resident=True,
+    )
+    assert not isinstance(dev, np.ndarray)
+    assert dev.dtype == arr.dtype and dev.shape == arr.shape
+    assert np.array_equal(np.asarray(dev), host)
+    # host-resolved request still returns numpy (safe fallback)
+    out = zipnn.decompress_array(ct, HUFF_CFG, backend="host", device_resident=True)
+    assert isinstance(out, np.ndarray) and np.array_equal(out, host)
+
+
+def test_delta_decompress_device_entropy():
+    import jax.numpy as jnp
+
+    base = make_array("float32", 30_000, seed=33)
+    new = (base.reshape(-1) + np.float32(1e-3)).reshape(base.shape)
+    ct = zipnn.delta_compress(new, base, HUFF_CFG)
+    host = zipnn.delta_decompress(ct, base, HUFF_CFG)
+    dev = zipnn.delta_decompress(
+        ct, jnp.asarray(base), HUFF_CFG,
+        backend="device", entropy_backend="device", device_resident=True,
+    )
+    assert not isinstance(dev, np.ndarray)
+    assert np.array_equal(np.asarray(dev), host) and np.array_equal(host, new)
+
+
+def test_decompress_pytree_device_entropy():
+    tree = {
+        "w": make_array("float32", 20_000, seed=34),
+        "b": make_array("bfloat16", 7_001, seed=35),
+    }
+    m = zipnn.compress_pytree(tree, HUFF_CFG)
+    host = zipnn.decompress_pytree(m, HUFF_CFG)
+    dev = zipnn.decompress_pytree(
+        m, HUFF_CFG, backend="device", entropy_backend="device"
+    )
+    for k in tree:
+        assert np.array_equal(np.asarray(host[k]), np.asarray(dev[k]))
+        assert np.array_equal(np.asarray(dev[k]), np.asarray(tree[k]))
+
+
+def test_stream_reader_device_entropy():
+    raw = make_array("float32", 90_000, seed=36).tobytes()
+    buf = io.BytesIO()
+    with engine.CompressWriter(buf, "float32", HUFF_CFG, window_bytes=1 << 17) as w:
+        w.write(raw)
+    buf.seek(0)
+    r = engine.DecompressReader(buf, HUFF_CFG, entropy_backend="device")
+    assert r.read() == raw
+
+
+def test_checkpoint_device_resident_restore(tmp_path):
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint.manager import CheckpointConfig, CheckpointManager
+
+    mgr = CheckpointManager(CheckpointConfig(
+        directory=str(tmp_path), zipnn=HUFF_CFG,
+        backend="device", entropy_backend="device",
+    ))
+    p1 = make_array("float32", 40_000, seed=37).reshape(200, 200)
+    p2 = (p1 + np.float32(1e-3)).astype(np.float32)
+    mgr.save(1, {"p": p1}, blocking=True)
+    mgr.save(2, {"p": p2}, blocking=True)       # delta vs the step-1 base
+    s, host_tree = mgr.restore()
+    assert s == 2 and np.array_equal(host_tree["p"], p2)
+    s, dev_tree = mgr.restore(device_resident=True)
+    assert s == 2 and isinstance(dev_tree["p"], jax.Array)
+    assert np.array_equal(np.asarray(dev_tree["p"]), p2)
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("x",))
+    s, sharded = mgr.shard_restore(None, mesh, {"p": P()})
+    assert s == 2 and np.array_equal(np.asarray(sharded["p"]), p2)
+
+
+def test_grad_sync_device_entropy():
+    from repro.distributed.grad_sync import GradSync
+
+    gs = GradSync(HUFF_CFG, entropy_backend="device")
+    grads = {"g": make_array("float32", 25_000, seed=38)}
+    manifest, _ = gs.pack(grads)
+    back = gs.unpack(manifest)
+    assert np.array_equal(np.asarray(back["g"]), np.asarray(grads["g"]))
