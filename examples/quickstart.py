@@ -144,6 +144,33 @@ def main():
     print("zero-bounce decode: compressed payload is the only host→device "
           "transfer; restored leaf is device-resident ✓")
 
+    # 10. Compressed-resident serving: weights stay ZNN1 payloads AT REST
+    # and decode just ahead of compute.  CompressedParamStore splits the
+    # stacked layers into per-layer payload manifests; the serving step
+    # (serve/step.py) runs a double-buffered prefetch/decode ring — while
+    # layer i's matmuls run, a background worker decodes layer i+1 through
+    # decompress_pytree(..., device_resident=True) — so at most 2 layers
+    # of decoded weights are ever claimed.  Logits are bit-identical to
+    # the plain decode step: the ring is a scheduling change, and the
+    # payload decode itself is byte-identical on every knob combo.
+    from repro.serve import CompressedParamStore, make_compressed_serve_step
+
+    model = build_model(cfg)
+    store = CompressedParamStore.from_params(params)
+    cstep = make_compressed_serve_step(model, store, ring=2)
+    step = jax.jit(model.decode_step)
+    sa = model.init_decode_state(2, 4, start_pos=0)
+    sb = model.init_decode_state(2, 4, start_pos=0)
+    toks = np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 1))
+    for _ in range(4):
+        la, sa = step(params, sa, toks)
+        lb, sb = cstep(sb, toks)
+        assert np.asarray(la).tobytes() == np.asarray(lb).tobytes()
+    assert store.peak_resident <= 2
+    print(f"compressed-resident serving: weights at rest {store.ratio_pct:.1f}% "
+          f"of raw, peak {store.peak_resident} decoded layers, logits "
+          "bit-identical ✓")
+
     # The byte-identity contract demonstrated above is also enforced
     # statically: `python -m repro.analysis --strict` (zipnn-lint) checks
     # determinism, knob threading, the container spec and the Pallas kernel

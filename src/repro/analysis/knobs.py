@@ -9,7 +9,8 @@ checks the whole call graph statically.
 
 Scope: the modules that form the public compression surface and its
 plumbing (``core/zipnn.py``, ``core/engine.py``, ``checkpoint/manager.py``,
-``checkpoint/hub.py``, ``distributed/grad_sync.py``).
+``checkpoint/hub.py``, ``distributed/grad_sync.py``,
+``serve/compressed.py`` + the ring scheduler in ``serve/step.py``).
 
 Model
 -----
@@ -52,6 +53,7 @@ SCOPE = (
     "src/repro/core/engine.py",
     "src/repro/checkpoint/",
     "src/repro/distributed/",
+    "src/repro/serve/",
 )
 
 # The public-surface contract: entry point -> knobs it must accept.
@@ -87,6 +89,12 @@ SURFACE: Dict[str, Dict[str, frozenset]] = {
     },
     "src/repro/distributed/grad_sync.py": {
         "GradSync": _CBE,
+    },
+    # The compressed-resident serving store carries the knobs for every
+    # ring decode; the ring scheduler itself is knob-free (store-carried,
+    # like CheckpointManager's config-carried path).
+    "src/repro/serve/compressed.py": {
+        "CompressedParamStore": _CBE,
     },
 }
 

@@ -94,7 +94,10 @@ def simulate_transfer(
         entropy_backend=entropy_backend,
     )
     t_dec = time.perf_counter() - t0
-    assert back == bytes(data), "hub transfer must be lossless"
+    if back != bytes(data):
+        # A real exception, not `assert`: the losslessness guard must
+        # survive `python -O` — it is an integrity check, not a debug aid.
+        raise IOError("hub transfer must be lossless: round-trip mismatch")
     codec = t_comp if direction == "upload" else t_dec
     return TransferReport(
         channel=channel,
@@ -202,7 +205,7 @@ def simulate_file_transfer(
                 entropy_backend=entropy_backend,
             )
     if n != raw_bytes:
-        raise AssertionError("streamed hub transfer must be lossless")
+        raise IOError("streamed hub transfer must be lossless")
     codec = t_comp if direction == "upload" else t_dec
     return TransferReport(
         channel=channel,

@@ -254,6 +254,8 @@ class CheckpointManager:
                 manifest["base_step"], device_resident=device_resident
             )
         out = {}
+        full_entries = []
+        full_cts = []
         for e in manifest["entries"]:
             blob = data[e["offset"] : e["offset"] + e["size"]]
             if zlib.crc32(blob) != e["crc"]:
@@ -265,9 +267,25 @@ class CheckpointManager:
                     device_resident=device_resident,
                 )
             else:
-                out[e["key"]] = zipnn.decompress_array(
-                    ct, self.cfg.zipnn, device_resident=device_resident
-                )
+                full_entries.append(e)
+                full_cts.append(ct)
+        if full_cts:
+            # Whole-tree batched restore: one decompress_pytree call groups
+            # same-layout leaves into batched device dispatches instead of
+            # a dispatch per leaf, and with device_resident=True the
+            # device-resolved leaves never bounce through host memory.
+            import jax.tree_util as jtu
+
+            arrays = zipnn.decompress_pytree(
+                {
+                    "treedef": jtu.tree_structure([0] * len(full_cts)),
+                    "leaves": full_cts,
+                },
+                self.cfg.zipnn,
+                device_resident=device_resident,
+            )
+            for e, arr in zip(full_entries, arrays):
+                out[e["key"]] = arr
         return out
 
     def restore(

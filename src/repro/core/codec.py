@@ -220,7 +220,8 @@ class PlaneCodec:
         self.codes = huffman.canonical_codes(self.table)
 
     def table_blob(self) -> bytes:
-        assert self.table is not None
+        if self.table is None:
+            raise RuntimeError("table_blob() called before build_table()")
         return huffman.pack_table(self.table)
 
     # -- compression ------------------------------------------------------

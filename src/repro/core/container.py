@@ -103,7 +103,10 @@ def pack_stream(
         if t is None:
             parts.append(b"\x00")
         else:
-            assert len(t) == 128
+            if len(t) != 128:
+                raise ValueError(
+                    f"plane table must be 128 packed bytes, got {len(t)}"
+                )
             parts.append(b"\x01" + t)
     # Metadata map, chunk-major so a prefix read yields a prefix of chunks.
     n_chunks = len(plane_entries[0]) if n_planes else 0

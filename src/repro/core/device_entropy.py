@@ -58,6 +58,7 @@ regardless of the configured encode backend.
 
 from __future__ import annotations
 
+import functools
 import zlib
 from typing import Any, List, Optional, Sequence, Tuple
 
@@ -321,7 +322,21 @@ def _stacked_luts(
     so one kernel launch can gather against any plane's row.  Planes
     without a table (no HUFF chunks) get an all-zero row that is never
     selected.
+
+    Memoized on the table bytes: the compressed-resident serving ring
+    (``repro.serve.compressed``) decodes the *same* payloads every token,
+    so the table unpack + LUT expansion is paid once per blob, not once
+    per step.  The cached array is only ever read (it feeds the kernel's
+    host→device upload), and the LUT is a pure function of the tables, so
+    memoization cannot change decoded bytes.
     """
+    return _stacked_luts_cached(tuple(tables_all))
+
+
+@functools.lru_cache(maxsize=64)
+def _stacked_luts_cached(
+    tables_all: Tuple[Optional[bytes], ...],
+) -> Tuple[np.ndarray, int]:
     lens_all: List[Optional[np.ndarray]] = []
     max_l = 1
     for tb in tables_all:

@@ -643,6 +643,7 @@ def decompress_pytree(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    device_resident: bool = False,
 ) -> Any:
     """Decompress every leaf of a :func:`compress_pytree` manifest.
 
@@ -654,11 +655,19 @@ def decompress_pytree(
     device entropy stage the decoded planes are already device-resident,
     so only compressed bytes cross host→device.  Decoded arrays are
     bit-identical to decompressing each leaf alone on any backend combo.
+
+    ``device_resident=True`` keeps leaves whose decode resolves to the
+    device backend on device as ``jax.Array``\\ s (bitcast straight from the
+    batched consumer's element output — zero device→host bounce); leaves
+    that ride the host path still come back as numpy.  The compressed-
+    resident serving store (:mod:`repro.serve.compressed`) decodes its ring
+    slots through exactly this path.
     """
     import jax
+    import jax.numpy as jnp
 
     cts: List[CompressedTensor] = manifest["leaves"]
-    arrays: List[Optional[np.ndarray]] = [None] * len(cts)
+    arrays: List[Optional[Any]] = [None] * len(cts)
 
     requested = config.plane_backend if backend is None else backend
     if requested != "host" and cts:
@@ -684,13 +693,24 @@ def decompress_pytree(
             acc = 0
 
             def flush():
-                raws = device_unplane.consume_planes_batched(win_planes, layout)
-                for i, raw in zip(win_idx, raws):
-                    arrays[i] = (
-                        np.frombuffer(raw.tobytes(), dtype=_np_dtype(cts[i].dtype))
-                        .reshape(cts[i].shape)
-                        .copy()
+                if device_resident:
+                    elems = device_unplane.consume_planes_batched(
+                        win_planes, layout, device_resident=True
                     )
+                    for i, el in zip(win_idx, elems):
+                        arrays[i] = jax.lax.bitcast_convert_type(
+                            el, jnp.dtype(_np_dtype(cts[i].dtype))
+                        ).reshape(cts[i].shape)
+                else:
+                    raws = device_unplane.consume_planes_batched(
+                        win_planes, layout
+                    )
+                    for i, raw in zip(win_idx, raws):
+                        arrays[i] = (
+                            np.frombuffer(raw.tobytes(), dtype=_np_dtype(cts[i].dtype))
+                            .reshape(cts[i].shape)
+                            .copy()
+                        )
                 win_idx.clear()
                 win_planes.clear()
 
@@ -725,6 +745,7 @@ def decompress_pytree(
                 entropy_backend=(
                     entropy_backend if entropy_backend is not None else backend
                 ),
+                device_resident=device_resident,
             )
     return jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
 
@@ -887,6 +908,12 @@ def delta_decompress(
     bounce) when the decode backend resolves to device; host-resolved
     decodes still return numpy.
     """
+    base_dtype = getattr(getattr(base, "dtype", None), "name", None)
+    if tuple(ct.shape) != tuple(np.shape(base)) or ct.dtype != base_dtype:
+        # Same clean contract as delta_compress: a mismatched base would
+        # otherwise surface as an opaque numpy broadcast error (host path)
+        # or an undefined kernel-shape failure (device path).
+        raise ValueError("delta requires matching shape/dtype")
     layout = bitlayout.LAYOUTS.get(getattr(getattr(base, "dtype", None), "name", ""))
     if (
         layout is not None

@@ -103,7 +103,9 @@ class GradSync:
             jax.tree_util.tree_leaves(jax.device_get(grads)),
             jax.tree_util.tree_leaves(rt),
         ):
-            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), "lossy sync!"
+            if np.asarray(a).tobytes() != np.asarray(b).tobytes():
+                # Integrity check, not a debug aid — must survive python -O.
+                raise IOError("lossy sync: decoded gradient != original bytes")
         factor = 2 * (n_peers - 1) / n_peers
         wire = link_gbps * 1e9 / 8
         return {

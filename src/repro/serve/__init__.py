@@ -1,3 +1,15 @@
-from .step import decode_state_specs, make_serve_step, make_prefill
+from .compressed import CompressedParamStore
+from .step import (
+    decode_state_specs,
+    make_compressed_serve_step,
+    make_prefill,
+    make_serve_step,
+)
 
-__all__ = ["decode_state_specs", "make_serve_step", "make_prefill"]
+__all__ = [
+    "CompressedParamStore",
+    "decode_state_specs",
+    "make_compressed_serve_step",
+    "make_prefill",
+    "make_serve_step",
+]

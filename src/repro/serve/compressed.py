@@ -1,0 +1,220 @@
+"""Compressed-resident serving store: weights at rest stay ZNN1 payloads.
+
+Serving holds the full uncompressed model in HBM today — decompression
+happens once, up front, and the paper's 33%+ savings evaporate the moment
+the forward pass starts.  Huff-LLM / ZipServ (PAPERS.md) show the
+alternative: keep the weights *compressed at rest* and decode each layer
+just ahead of its matmuls, so decoded weights only ever exist for the
+layers currently in flight.
+
+``CompressedParamStore`` is the at-rest half of that design.  It splits a
+model's parameter tree along the stacked-layer leading axis into per-layer
+subtrees and compresses each one into ZNN1 payloads (one
+:func:`repro.core.zipnn.compress_pytree` manifest per layer, so a layer
+decode is one batched multi-leaf dispatch).  Non-stacked params — embed,
+final norm, lm head, learned positions — are the ``static`` residue: they
+are touched every token and stay uncompressed.
+
+``decode_layer`` restores one layer through
+``zipnn.decompress_pytree(..., device_resident=True)``: under the device
+backends only the compressed payload crosses host→device (the device
+Huffman decoder feeds the fused un-plane consumer in place) and the leaves
+land as device-resident ``jax.Array``\\ s; under the host backends the same
+call returns bit-identical numpy — the knob contract.  The ring scheduler
+(:func:`repro.serve.step.make_compressed_serve_step`) drives
+decode/release; the store only does bookkeeping: ``resident_count`` /
+``peak_resident`` count decoded-layer slots alive right now / ever, which
+is what the "at most ``ring`` decoded layers" claim asserts against.
+
+Knobs (``threads`` / ``backend`` / ``entropy_backend``) are instance-
+carried — the store forwards them on every compress/decompress edge, and
+``analysis/knobs.py`` pins the constructor surface.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core import zipnn
+
+PyTree = Any
+
+# Stacked-layer top-level keys across the model zoo (leading axis = layer).
+# hybrid's nested mamba_groups/shared_attn layout is not ring-schedulable
+# (shared params repeat across groups) and is rejected by the scheduler.
+DEFAULT_STACK_KEYS: Tuple[str, ...] = ("layers", "dense_layers", "moe_layers")
+
+
+def _leaf_nbytes(leaf: Any) -> int:
+    return int(np.size(leaf)) * np.dtype(leaf.dtype).itemsize
+
+
+class CompressedParamStore:
+    """Per-layer ZNN1 payloads at rest + decoded-slot residency accounting."""
+
+    def __init__(
+        self,
+        config: Optional[zipnn.ZipNNConfig] = None,
+        *,
+        threads: Optional[int] = None,
+        backend: Optional[str] = None,
+        entropy_backend: Optional[str] = None,
+    ) -> None:
+        self._config = zipnn.DEFAULT if config is None else config
+        self._threads = threads
+        self._backend = backend
+        self._entropy_backend = entropy_backend
+        self.static: Dict[str, PyTree] = {}
+        self._stacks: Dict[str, List[Dict[str, Any]]] = {}
+        self._lock = threading.Lock()
+        self._resident: set = set()
+        self.peak_resident = 0
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_params(
+        cls,
+        params: Mapping[str, PyTree],
+        config: Optional[zipnn.ZipNNConfig] = None,
+        *,
+        stack_keys: Optional[Tuple[str, ...]] = None,
+        threads: Optional[int] = None,
+        backend: Optional[str] = None,
+        entropy_backend: Optional[str] = None,
+    ) -> "CompressedParamStore":
+        """Compress ``params``' stacked-layer subtrees into a store.
+
+        Every top-level key in ``stack_keys`` (default: the zoo's stacked
+        keys present in ``params``) is split along its leading layer axis
+        and compressed per layer; everything else stays uncompressed in
+        ``store.static``.  Compression is deterministic, so two stores
+        built from the same params hold byte-identical payloads on any
+        backend/threads combination.
+        """
+        import jax
+
+        if not isinstance(params, Mapping):
+            raise ValueError(
+                "from_params expects the model's top-level param dict"
+            )
+        store = cls(
+            config,
+            threads=threads,
+            backend=backend,
+            entropy_backend=entropy_backend,
+        )
+        keys = DEFAULT_STACK_KEYS if stack_keys is None else stack_keys
+        for key, sub in params.items():
+            if key not in keys:
+                store.static[key] = sub
+                continue
+            leaves = jax.tree_util.tree_leaves(sub)
+            if not leaves:
+                continue
+            n = leaves[0].shape[0]
+            store._stacks[key] = [
+                zipnn.compress_pytree(
+                    jax.tree_util.tree_map(lambda a: a[i], sub),
+                    store._config,
+                    threads=store._threads,
+                    backend=store._backend,
+                    entropy_backend=store._entropy_backend,
+                )
+                for i in range(n)
+            ]
+        return store
+
+    # -- decode / residency ------------------------------------------------
+
+    def decode_layer(self, key: str, i: int) -> PyTree:
+        """Decode layer ``i`` of stack ``key`` into a ring slot.
+
+        One batched ``decompress_pytree(..., device_resident=True)`` call:
+        bit-identical leaves on every backend combo; device-resolved leaves
+        stay on device with zero host bounce.  Marks the slot resident —
+        the caller owns it until :meth:`release`.
+        """
+        manifest = self._stacks[key][i]
+        tree = zipnn.decompress_pytree(
+            manifest,
+            self._config,
+            threads=self._threads,
+            backend=self._backend,
+            entropy_backend=self._entropy_backend,
+            device_resident=True,
+        )
+        with self._lock:
+            self._resident.add((key, i))
+            self.peak_resident = max(self.peak_resident, len(self._resident))
+        return tree
+
+    def release(self, key: str, i: int) -> None:
+        """Return a decoded slot to the ring (drops the store's claim; the
+        buffers themselves die when the layer's compute finishes)."""
+        with self._lock:
+            self._resident.discard((key, i))
+
+    @property
+    def resident_count(self) -> int:
+        with self._lock:
+            return len(self._resident)
+
+    def reset_peak(self) -> None:
+        with self._lock:
+            self._resident.clear()
+            self.peak_resident = 0
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def stack_keys(self) -> Tuple[str, ...]:
+        return tuple(self._stacks)
+
+    def n_layers(self, key: str) -> int:
+        return len(self._stacks.get(key, ()))
+
+    @property
+    def raw_bytes(self) -> int:
+        """Uncompressed size of the compressed-at-rest stacks."""
+        return sum(m["raw_bytes"] for ms in self._stacks.values() for m in ms)
+
+    @property
+    def comp_bytes(self) -> int:
+        """ZNN1 payload size actually held at rest."""
+        return sum(m["comp_bytes"] for ms in self._stacks.values() for m in ms)
+
+    @property
+    def ratio_pct(self) -> float:
+        return 100.0 * self.comp_bytes / max(1, self.raw_bytes)
+
+    @property
+    def static_bytes(self) -> int:
+        import jax
+
+        return sum(
+            _leaf_nbytes(l)
+            for sub in self.static.values()
+            for l in jax.tree_util.tree_leaves(sub)
+        )
+
+    @property
+    def max_layer_raw_bytes(self) -> int:
+        """Decoded size of the largest single layer — one ring slot."""
+        return max(
+            (m["raw_bytes"] for ms in self._stacks.values() for m in ms),
+            default=0,
+        )
+
+    def footprint_bytes(self, ring: int = 2) -> int:
+        """Serving-time weight footprint: payloads at rest + static residue
+        + ``ring`` decoded-layer slots (vs ``raw_bytes + static_bytes``
+        for the uncompressed model)."""
+        return (
+            self.comp_bytes
+            + self.static_bytes
+            + ring * self.max_layer_raw_bytes
+        )

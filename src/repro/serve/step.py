@@ -113,6 +113,195 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
+def make_compressed_serve_step(
+    model: Model,
+    store,
+    *,
+    ring: int = 2,
+    prefetch: bool = True,
+) -> Callable:
+    """Compressed-resident decode step over a ``CompressedParamStore``.
+
+    ``serve_step(state, tokens) -> (logits, new_state)`` — same contract as
+    :func:`make_serve_step`'s step, but the weights live in ``store`` as
+    ZNN1 payloads and decode **just ahead of compute**: a double-buffered
+    prefetch/decode ring (default ``ring=2``) runs layer *i*'s matmuls
+    while a single background worker decodes layer *i+1* into the next
+    slot, so at most ``ring`` layers of decoded weights are claimed at any
+    moment (``store.peak_resident`` asserts this).  Each slot is released
+    as soon as its layer's compute is dispatched; XLA frees the decoded
+    buffers when the matmuls retire.
+
+    Logits and new state are **bit-identical** to the uncompressed
+    ``model.decode_step``: the per-layer block functions are the same code
+    decode_step runs (jit-compiled once per block *kind*, reused by every
+    layer — identical math to the scan body), the cache slot-write happens
+    once after the loop exactly as in decode_step, and the payload decode
+    itself is byte-identical across ``backend`` × ``entropy_backend`` ×
+    ``threads`` (the knob contract; ``prefetch=False`` gives the
+    host-sequential fallback with residency 1).
+
+    hybrid (mamba-group) models are rejected: their shared attention
+    params repeat across groups, which does not fit a per-layer ring.
+    """
+    import jax.numpy as jnp
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.models import blocks, layers
+    from repro.models.model import _slot_write
+    from repro.distributed.sharding import lshard
+
+    cfg = model.cfg
+    if cfg.family == "hybrid":
+        raise NotImplementedError(
+            "hybrid (mamba-group) models are not supported by the "
+            "compressed serving ring: shared_attn params repeat per group"
+        )
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name}: family {cfg.family!r} has no decode path")
+    if ring < 1:
+        raise ValueError(f"ring must be >= 1, got {ring}")
+
+    if cfg.family == "moe":
+        fk = cfg.first_k_dense
+        plan = [("dense_layers", i, "dense") for i in range(fk)] + [
+            ("moe_layers", i, "moe") for i in range(cfg.n_layers - fk)
+        ]
+    else:
+        plan = [("layers", i, "ssm" if cfg.family == "ssm" else "dense")
+                for i in range(cfg.n_layers)]
+    for key in {k for k, _, _ in plan}:
+        want = sum(1 for k, _, _ in plan if k == key)
+        if store.n_layers(key) != want:
+            raise ValueError(
+                f"store stack {key!r} holds {store.n_layers(key)} layers, "
+                f"model {cfg.name} needs {want}"
+            )
+
+    # One compile per block *kind*, shared by every layer (all layers of a
+    # stack have identical shapes) — the same block functions decode_step's
+    # scan body runs, so the math is bit-identical to the fused step.
+    kinds = {
+        "dense": jax.jit(
+            lambda lp, h, c0, c1, pos: blocks.dense_block_decode(
+                lp, h, (c0, c1), pos, cfg
+            )
+        ),
+        "moe": jax.jit(
+            lambda lp, h, c0, c1, pos: blocks.moe_block_decode(
+                lp, h, (c0, c1), pos, cfg
+            )
+        ),
+        "ssm": jax.jit(
+            lambda lp, h, st, cv, pos: blocks.mamba_block_decode(
+                lp, h, (st, cv), pos, cfg
+            )
+        ),
+    }
+
+    # Front/tail mirror decode_step line for line (kept eager: they are a
+    # token-sized gather and one unembed matmul — bitwise the same ops).
+    def _front(sp, tokens, pos):
+        x = layers.embed(sp["embed"], tokens)
+        if cfg.pos_embedding == "learned":
+            pe = jax.lax.dynamic_slice_in_dim(
+                sp["pos"]["table"], jnp.minimum(pos, cfg.max_position - 1), 1
+            )
+            x = x + pe[None].astype(x.dtype)
+        return lshard(x, "batch", None, None)
+
+    def _tail(sp, x):
+        x = blocks.norm_apply(cfg, sp["final_norm"], x)
+        head = sp["embed"] if cfg.tie_embeddings else sp["lm_head"]
+        return layers.unembed(head, x)
+
+    executor = (
+        ThreadPoolExecutor(max_workers=1, thread_name_prefix="znn-ring")
+        if (prefetch and ring > 1)
+        else None
+    )
+    depth = ring - 1 if executor is not None else 0
+
+    def _decode(j: int):
+        key, i, _ = plan[j]
+        return store.decode_layer(key, i)
+
+    def serve_step(state, tokens):
+        pos = state["pos"]
+        x = _front(store.static, tokens, pos)
+        new_state = dict(state)
+
+        inflight: list = []
+        nxt = 0
+
+        def pump() -> None:
+            # Keep up to ring-1 decodes ahead of compute; the worker fills
+            # the next slot while the current layer's matmuls run.
+            nonlocal nxt
+            while (
+                executor is not None
+                and nxt < len(plan)
+                and len(inflight) < depth
+            ):
+                inflight.append(executor.submit(_decode, nxt))
+                nxt += 1
+
+        def layer_params(j: int):
+            nonlocal nxt
+            if inflight:
+                lp = inflight.pop(0).result()
+            else:
+                lp = _decode(j)
+                nxt = j + 1
+            pump()
+            return lp
+
+        pump()
+        if cfg.family == "ssm":
+            outs_s, outs_c = [], []
+            for j, (key, i, kind) in enumerate(plan):
+                lp = layer_params(j)
+                x, (st, cv) = kinds[kind](
+                    lp, x, state["ssm_state"][j], state["ssm_conv"][j], pos
+                )
+                store.release(key, i)
+                outs_s.append(st)
+                outs_c.append(cv)
+            new_state["ssm_state"] = jnp.stack(outs_s)
+            new_state["ssm_conv"] = jnp.stack(outs_c)
+        else:
+            c0, c1 = (
+                (state["mla_ckv"], state["mla_kr"])
+                if cfg.mla
+                else (state["kv_k"], state["kv_v"])
+            )
+            Lc = c0.shape[2]
+            slot = (pos % Lc).astype(jnp.int32)
+            outs0, outs1 = [], []
+            for j, (key, i, kind) in enumerate(plan):
+                lp = layer_params(j)
+                x, (u0, u1) = kinds[kind](lp, x, c0[j], c1[j], pos)
+                store.release(key, i)
+                outs0.append(u0)
+                outs1.append(u1)
+            # single slot write for all layers, exactly as decode_step
+            n0, n1 = jnp.stack(outs0), jnp.stack(outs1)
+            if cfg.mla:
+                new_state["mla_ckv"] = _slot_write(c0, n0, slot)
+                new_state["mla_kr"] = _slot_write(c1, n1, slot)
+            else:
+                new_state["kv_k"] = _slot_write(c0, n0, slot)
+                new_state["kv_v"] = _slot_write(c1, n1, slot)
+
+        logits = _tail(store.static, x)
+        new_state["pos"] = pos + 1
+        return logits, new_state
+
+    serve_step.store = store
+    serve_step.ring = ring
+    return serve_step
+
+
 def make_prefill(model: Model) -> Callable:
     """prefill(params, batch) → logits for the full prompt (chunked attn)."""
 
@@ -127,15 +316,35 @@ def greedy_generate(
     model: Model, params, prompt, steps: int
 ) -> Tuple[Any, Any]:
     """Small-scale generation loop for examples/tests (feeds tokens one by
-    one through the decode step; caches sized for prompt+steps)."""
+    one through the decode step; caches sized for prompt+steps).
+
+    ``steps == 0`` is valid (prompt is fed through the cache, no tokens are
+    sampled; returns an empty ``(B, 0)`` int32 array).  An empty prompt or
+    negative ``steps`` raises ``ValueError`` — there is no logits history
+    to sample the first token from.
+    """
     import jax.numpy as jnp
 
+    if getattr(prompt, "ndim", None) != 2:
+        raise ValueError(
+            f"prompt must be a (B, S) token array, got shape "
+            f"{getattr(prompt, 'shape', None)}"
+        )
     B, S = prompt.shape
+    if S == 0:
+        raise ValueError(
+            "prompt must contain at least one token (S == 0): the first "
+            "sampled token is argmax over the prompt's last logits"
+        )
+    if steps < 0:
+        raise ValueError(f"steps must be >= 0, got {steps}")
     state = model.init_decode_state(B, S + steps, start_pos=0)
     step = jax.jit(model.decode_step)
     logits = None
     for t in range(S):
         logits, state = step(params, state, prompt[:, t : t + 1])
+    if steps == 0:
+        return jnp.zeros((B, 0), dtype=jnp.int32), state
     out = []
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     for _ in range(steps):
