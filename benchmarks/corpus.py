@@ -6,11 +6,19 @@ skew (Gaussian-ish scale mixture ⇒ ~25–45 live exponent values, top-12 ≈
 99.9 % mass — validated against paper Fig. 2 in tests/benchmarks), plus the
 category transformations (rounding, dtype conversion) that create "clean"
 models.  Categories map to the paper's Table 1/2 rows.
+
+Beyond the paper's checkpoint-weight rows, the *component* generators
+model the other tensor populations the repo compresses: KV-cache entries
+(activations-at-rest, ``serve/kvcache.py``), AdamW optimizer moments
+(``checkpoint/manager.py`` moment chains), and fp8/int8 quantized weights
+(the sub-byte / integer bit layouts in ``core/bitlayout.py``).  These rows
+have no paper Table 2 column (``paper_ratio_pct`` is None) — their ratios
+are pinned by the bench-regression gate instead.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import ml_dtypes
 import numpy as np
@@ -76,7 +84,54 @@ def image_model_fp32(n: int, seed: int = 6) -> np.ndarray:
     return w
 
 
-CATEGORIES: Dict[str, Tuple[Callable[[int], np.ndarray], str, float]] = {
+def kv_cache_bf16(n: int, seed: int = 7, heads: int = 16) -> np.ndarray:
+    """KV-cache-like BF16: attention keys/values at rest.  Post-norm
+    activations sit at O(1) scale with per-head spread — a narrower, hotter
+    exponent band than weights, still exponent-skewed enough for the
+    byte-group pipeline (the ``serve/kvcache.py`` cold-tier payload)."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for sz in rng.multinomial(n, np.ones(heads) / heads):
+        scale = float(rng.choice([2.0, 1.0, 0.7, 0.5, 0.3]))
+        parts.append(rng.standard_normal(sz).astype(np.float32) * scale)
+    return np.concatenate(parts).astype(ml_dtypes.bfloat16)
+
+
+def adam_moments_fp32(n: int, seed: int = 8) -> np.ndarray:
+    """AdamW optimizer moments: first half ``m`` (EMA of gradients —
+    signed, gradient-scale), second half ``v`` (EMA of squared gradients —
+    positive, tiny, heavy-tailed).  The ``CheckpointManager`` moment-chain
+    payload: wide negative exponents, no sign bit entropy in ``v``."""
+    half = n // 2
+    m = _trained_like(half, seed) * 1e-2
+    v = np.square(_trained_like(n - half, seed + 1) * 1e-2)
+    return np.concatenate([m, v]).astype(np.float32)
+
+
+def fp8_e4m3(n: int, seed: int = 9) -> np.ndarray:
+    """fp8-quantized weights (e4m3): trained-weight distribution cast down
+    — 4 exponent bits still dominate the high nibble plane."""
+    return _trained_like(n, seed).astype(ml_dtypes.float8_e4m3fn)
+
+
+def fp8_e5m2(n: int, seed: int = 10) -> np.ndarray:
+    """fp8-quantized weights (e5m2): wider exponent, 2-bit fraction."""
+    return _trained_like(n, seed).astype(ml_dtypes.float8_e5m2)
+
+
+def int8_quantized(n: int, seed: int = 11, channels: int = 64) -> np.ndarray:
+    """int8 weights under symmetric per-channel quantization: each channel
+    rescaled to the full [-127, 127] range (absmax), so the byte histogram
+    is the bell the ``i8`` whole-byte layout order-0 codes."""
+    w = _trained_like(n, seed)
+    out = np.empty(n, dtype=np.int8)
+    for idx in np.array_split(np.arange(n), channels):
+        scale = max(float(np.abs(w[idx]).max()) / 127.0, 1e-12)
+        out[idx] = np.clip(np.rint(w[idx] / scale), -127, 127).astype(np.int8)
+    return out
+
+
+CATEGORIES: Dict[str, Tuple[Callable[[int], np.ndarray], str, Optional[float]]] = {
     # name: (generator, dtype_name, paper_ratio_pct)
     "llama3-like (BF16 regular)": (regular_bf16, "bfloat16", 66.4),
     "olmo-like (FP32 regular)": (regular_fp32, "float32", 83.1),
@@ -85,6 +140,12 @@ CATEGORIES: Dict[str, Tuple[Callable[[int], np.ndarray], str, float]] = {
     "t5-like (FP32 upcast)": (very_clean_fp32, "float32", 33.7),
     "svd-like (FP16 from BF16)": (clean_fp16, "float16", 84.8),
     "resnet-like (FP32 image)": (image_model_fp32, "float32", 83.3),
+    # Component payloads (no paper column — gated by the bench baseline).
+    "kv-cache-like (BF16 activations)": (kv_cache_bf16, "bfloat16", None),
+    "adam-moments (FP32 m+v)": (adam_moments_fp32, "float32", None),
+    "fp8-quantized (E4M3)": (fp8_e4m3, "float8_e4m3fn", None),
+    "fp8-quantized (E5M2)": (fp8_e5m2, "float8_e5m2", None),
+    "int8-quantized (per-channel)": (int8_quantized, "int8", None),
 }
 
 

@@ -27,11 +27,21 @@ compress path** (fused plane producer + fused Huffman bit-pack entropy
 stage, ``core/device_entropy.py``) under the canonical ``huffman`` coder
 and asserts those blobs byte-identical to the host canonical coder's.
 
+The **component rows** (``component_rows``) run the host ZipNN path over
+the component corpus — KV-cache-like BF16, AdamW moments FP32, fp8
+e4m3/e5m2, int8 — the payloads the KV tier, the moment chains and the
+sub-byte/integer bit layouts compress.  Their ratios are deterministic
+(numpy-seeded corpus) and pinned exactly by the bench gate.
+
 The run ends with the **compressed-resident serving rows** (``serve_rows``,
 skip with ``--no-serve``): the per-layer prefetch/decode ring
 (``repro/serve/compressed.py``) vs the plain jitted decode step — logits
 asserted bit-identical in lockstep, peak decoded residency asserted ≤ 2
-layers, and tokens/sec × HBM weight footprint reported side by side.
+layers, and tokens/sec × HBM weight footprint reported side by side —
+followed by the **KV-tier row** (``kv_serve_rows``): a greedy decode
+through ``make_kv_tiered_serve_step`` over a ``KVCacheStore``, logits
+asserted bit-identical to the untiered ``decode_step`` at every step and
+live hot positions asserted ≤ hot_window + block_len.
 Results are written to ``BENCH_table3.json``.
 """
 
@@ -45,6 +55,7 @@ from typing import List, Sequence
 import numpy as np
 
 from repro.core import baselines, engine, zipnn
+from repro.core.options import CodecOptions
 
 from . import corpus
 
@@ -61,6 +72,131 @@ def _timed(fn, *args, reps: int = 1):
         if i == 0:
             out = r
     return out, best
+
+
+# Component payloads: (row name, corpus generator, dtype name).  Host
+# ZipNN only — the backend × threads parity matrix already runs on the
+# three model rows; these rows pin the *component* ratios (KV tier,
+# moment chains, fp8/int8 layouts) under the bench gate.
+COMPONENT_MODELS = (
+    ("KV-cache-like BF16", corpus.kv_cache_bf16, "bfloat16"),
+    ("Adam-moments FP32", corpus.adam_moments_fp32, "float32"),
+    ("fp8-E4M3 weights", corpus.fp8_e4m3, "float8_e4m3fn"),
+    ("fp8-E5M2 weights", corpus.fp8_e5m2, "float8_e5m2"),
+    ("int8 per-channel weights", corpus.int8_quantized, "int8"),
+)
+
+
+def component_rows(n: int, reps: int = 1) -> List[dict]:
+    """Ratio + host speed for the component corpus (decode round-trips)."""
+    rows = []
+    for name, gen, dtype in COMPONENT_MODELS:
+        raw = corpus.as_bytes(gen(n))
+        nb = len(raw)
+        blob, t_c = _timed(
+            lambda: zipnn.compress_bytes(raw, dtype), reps=reps
+        )
+        back, t_d = _timed(lambda: zipnn.decompress_bytes(blob), reps=reps)
+        assert back == raw, f"{name}: decode != raw bytes"
+        rows.append(
+            {"model": name, "method": "ZipNN",
+             "comp_pct": round(100 * len(blob) / nb, 1),
+             "comp_gbps": round(nb / t_c / 1e9, 3),
+             "decomp_gbps": round(nb / t_d / 1e9, 3)}
+        )
+    return rows
+
+
+def _serve_params(model, rng):
+    """Fill abstract params from a numpy PCG64 stream (jax-version-stable
+    bytes ⇒ stable store ratios for the gated rows)."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(model.abstract_params())
+    params = jax.tree_util.tree_unflatten(
+        treedef,
+        [
+            (rng.standard_normal(l.shape) * 0.02).astype(np.dtype(l.dtype))
+            for l in leaves
+        ],
+    )
+    return params, leaves
+
+
+def kv_serve_rows(
+    steps: int = 10, hot_window: int = 3, block_len: int = 2
+) -> List[dict]:
+    """KV-cache tiering row: bit-identity smoke + residency accounting.
+
+    Greedy-decodes ``steps`` tokens through ``make_kv_tiered_serve_step``
+    over a ``KVCacheStore`` (cold cache blocks as ZNN1 payloads) in
+    lockstep with the plain jitted ``decode_step`` and asserts the logits
+    byte-identical at every step — the KV bit-identity contract — plus
+    live hot positions ≤ hot_window + block_len.  Cache bytes are jax
+    activations (not numpy-seeded), so the compressed-cold ratio is
+    reported, not gated (``comp_pct`` stays None).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import KVCacheStore, make_kv_tiered_serve_step
+
+    cfg = get_config("repro_gpt_100m").reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(1)
+    params, _ = _serve_params(model, rng)
+    B = 2
+    toks = [
+        jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+        for _ in range(steps)
+    ]
+
+    step = jax.jit(model.decode_step)
+    state = model.init_decode_state(B, steps, start_pos=0)
+    kv_store = KVCacheStore(
+        model.init_decode_state(B, steps, start_pos=0),
+        hot_window=hot_window, block_len=block_len,
+    )
+    tstep = make_kv_tiered_serve_step(model, params, kv_store)
+
+    t0 = time.perf_counter()
+    for t in toks:
+        la, state = step(params, state, t)
+        lb = tstep(t)
+        if np.asarray(la).tobytes() != np.asarray(lb).tobytes():
+            raise AssertionError("kv-tiered logits != untiered logits")
+    t_kv = time.perf_counter() - t0
+    cap = kv_store.hot_window + kv_store.block_len
+    if kv_store.peak_hot_positions > cap:
+        raise AssertionError(
+            f"hot residency {kv_store.peak_hot_positions} > {cap}"
+        )
+    if kv_store.n_cold_blocks == 0:
+        raise AssertionError("kv smoke never evicted a block")
+
+    return [
+        {"model": "repro-gpt-100m reduced (kv-tier)",
+         "method": "ZipNN(kv-tier)",
+         "comp_pct": None,
+         "tok_per_s": round(B * steps / t_kv, 1),
+         "kv_full_kb": round(kv_store.full_cache_bytes / 1e3, 3),
+         "kv_resident_kb": round(kv_store.resident_bytes(1) / 1e3, 3),
+         "kv_cold_pct": round(
+             100 * kv_store.cold_comp_bytes
+             / max(kv_store.cold_raw_bytes, 1), 1
+         ),
+         "comp_gbps": None, "decomp_gbps": None,
+         "parity": "bit-identical logits",
+         "note": (
+             f"lockstep vs decode_step over {steps} tokens; hot positions "
+             f"<= hot_window+block_len asserted; cache bytes are jax "
+             "activations, so the cold ratio is reported, not gated "
+             "(smoke-sized cache: the resident-vs-full win needs "
+             "length >> hot_window, like the serve-ring footprint)"
+         )},
+    ]
 
 
 def serve_rows(steps: int = 8) -> List[dict]:
@@ -87,14 +223,7 @@ def serve_rows(steps: int = 8) -> List[dict]:
     cfg = get_config("repro_gpt_100m").reduced()
     model = build_model(cfg)
     rng = np.random.default_rng(0)
-    leaves, treedef = jax.tree_util.tree_flatten(model.abstract_params())
-    params = jax.tree_util.tree_unflatten(
-        treedef,
-        [
-            (rng.standard_normal(l.shape) * 0.02).astype(np.dtype(l.dtype))
-            for l in leaves
-        ],
-    )
+    params, leaves = _serve_params(model, rng)
     raw_mb = sum(
         int(np.size(l)) * np.dtype(l.dtype).itemsize for l in leaves
     ) / 1e6
@@ -187,11 +316,13 @@ def run(
 
         blob_1t = None
         for nt in sweep:
+            opts = CodecOptions(threads=nt)
             blob, t_c = _timed(
-                lambda: zipnn.compress_bytes(raw, dtype, threads=nt), reps=reps
+                lambda: zipnn.compress_bytes(raw, dtype, options=opts),
+                reps=reps,
             )
             back, t_d = _timed(
-                lambda: zipnn.decompress_bytes(blob, threads=nt), reps=reps
+                lambda: zipnn.decompress_bytes(blob, options=opts), reps=reps
             )
             assert back == raw
             if nt == 1:
@@ -211,18 +342,15 @@ def run(
             import jax
 
             for nt in sweep:
+                dev_opts = CodecOptions(threads=nt, backend="device")
                 dev_blob, t_c = _timed(
-                    lambda: zipnn.compress_bytes(
-                        raw, dtype, threads=nt, backend="device"
-                    ),
+                    lambda: zipnn.compress_bytes(raw, dtype, options=dev_opts),
                     reps=reps,
                 )
                 # backend contract: device blobs byte-identical to host
                 assert dev_blob == blob_1t, "device blob != host blob"
                 dev_back, t_d = _timed(
-                    lambda: zipnn.decompress_bytes(
-                        dev_blob, threads=nt, backend="device"
-                    ),
+                    lambda: zipnn.decompress_bytes(dev_blob, options=dev_opts),
                     reps=reps,
                 )
                 # decode contract: device-decoded bytes bit-identical
@@ -245,12 +373,17 @@ def run(
             # the canonical 'huffman' coder; blobs asserted byte-identical
             # to the host canonical coder's.
             cfg_h = zipnn.ZipNNConfig(backend="huffman")
+            host_opts = CodecOptions(backend="host")
             huff_host, t_hc = _timed(
-                lambda: zipnn.compress_bytes(raw, dtype, cfg_h, backend="host"),
+                lambda: zipnn.compress_bytes(
+                    raw, dtype, cfg_h, options=host_opts
+                ),
                 reps=reps,
             )
             huff_back, t_hd = _timed(
-                lambda: zipnn.decompress_bytes(huff_host, cfg_h, backend="host"),
+                lambda: zipnn.decompress_bytes(
+                    huff_host, cfg_h, options=host_opts
+                ),
                 reps=reps,
             )
             assert huff_back == raw, "host huffman decode != raw bytes"
@@ -260,9 +393,10 @@ def run(
                  "comp_gbps": round(nb / t_hc / 1e9, 3),
                  "decomp_gbps": round(nb / t_hd / 1e9, 3)}
             )
+            full_dev = CodecOptions(backend="device", entropy_backend="device")
             dev_h, t_c = _timed(
                 lambda: zipnn.compress_bytes(
-                    raw, dtype, cfg_h, backend="device", entropy_backend="device"
+                    raw, dtype, cfg_h, options=full_dev
                 ),
                 reps=reps,
             )
@@ -271,9 +405,7 @@ def run(
             # the fused un-plane consumer — only compressed bytes cross
             # host→device, and output is asserted bit-identical to raw.
             dev_back, t_d = _timed(
-                lambda: zipnn.decompress_bytes(
-                    dev_h, cfg_h, backend="device", entropy_backend="device"
-                ),
+                lambda: zipnn.decompress_bytes(dev_h, cfg_h, options=full_dev),
                 reps=reps,
             )
             assert dev_back == raw, "device-entropy decode != raw bytes"
@@ -288,8 +420,10 @@ def run(
                      "not a speed claim"
                  ) if jax.default_backend() != "tpu" else None}
             )
+    rows += component_rows(n, reps=reps)
     if serve:
         rows += serve_rows()
+        rows += kv_serve_rows()
     return rows
 
 
@@ -314,8 +448,8 @@ def main() -> None:
     )
     ap.add_argument(
         "--no-serve", action="store_true",
-        help="skip the compressed-resident serving rows (ring parity + "
-             "tokens/sec × HBM footprint)",
+        help="skip the serving rows (ring parity + tokens/sec × HBM "
+             "footprint, and the KV-tier bit-identity smoke)",
     )
     args = ap.parse_args()
     backends = {

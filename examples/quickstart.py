@@ -55,10 +55,16 @@ def main():
     # (plane, chunk) work items across all cores — bytes are identical to
     # the serial path — and compress_file/decompress_file stream checkpoints
     # larger than RAM through a bounded window.
+    # Execution knobs ride one frozen CodecOptions bag (core/options.py);
+    # the old loose threads=/backend=/entropy_backend= kwargs still work
+    # behind a DeprecationWarning and win over the bag when set.
+    from repro.core.options import CodecOptions
+
+    all_cores = CodecOptions(threads=-1)
     import tempfile, os, time
     raw = np.ascontiguousarray(w).view(np.uint8).tobytes()
     t0 = time.perf_counter()
-    blob = zipnn.compress_bytes(raw, "bfloat16", threads=-1)
+    blob = zipnn.compress_bytes(raw, "bfloat16", options=all_cores)
     t_par = time.perf_counter() - t0
     assert blob == zipnn.compress_bytes(raw, "bfloat16")   # deterministic
     with tempfile.TemporaryDirectory() as td:
@@ -67,7 +73,7 @@ def main():
         with open(src, "wb") as f:
             f.write(raw)
         raw_b, comp_b = zipnn.compress_file(
-            src, dst, "bfloat16", window_bytes=1 << 20, threads=-1
+            src, dst, "bfloat16", window_bytes=1 << 20, options=all_cores
         )
         print(f"engine: {raw_b/1e6:.1f} MB streamed → {comp_b/1e6:.1f} MB "
               f"(all-core compress in {t_par*1e3:.0f} ms, O(window) memory)")
@@ -80,10 +86,10 @@ def main():
     # across backends — on a CPU host the kernels run in interpret mode, so
     # the timing below is a correctness demo, not a speed claim.
     t0 = time.perf_counter()
-    host_out = zipnn.decompress_bytes(blob, threads=-1, backend="host")
+    host_out = zipnn.decompress_bytes(blob, options=all_cores.replace(backend="host"))
     t_host = time.perf_counter() - t0
     t0 = time.perf_counter()
-    dev_out = zipnn.decompress_bytes(blob, threads=-1, backend="device")
+    dev_out = zipnn.decompress_bytes(blob, options=all_cores.replace(backend="device"))
     t_dev = time.perf_counter() - t0
     assert host_out == dev_out == raw                  # bit-exact contract
     print(f"decode: host {t_host*1e3:.0f} ms, device-backend {t_dev*1e3:.0f} ms "
@@ -101,13 +107,18 @@ def main():
     # the two stages for mixed mode.  Blobs are byte-identical on every
     # combination — that's the contract tests/parity.py enforces.
     cfg_h = zipnn.ZipNNConfig(backend="huffman")
-    ref = zipnn.compress_bytes(raw, "bfloat16", cfg_h, backend="host")
+    ref = zipnn.compress_bytes(
+        raw, "bfloat16", cfg_h, options=CodecOptions(backend="host")
+    )
     full_dev = zipnn.compress_bytes(
-        raw, "bfloat16", cfg_h, backend="device"       # plane + entropy
+        raw, "bfloat16", cfg_h,
+        options=CodecOptions(backend="device"),        # plane + entropy
     )
     mixed = zipnn.compress_bytes(
         raw, "bfloat16", cfg_h,
-        backend="host", entropy_backend="device",      # host probe, device pack
+        options=CodecOptions(                          # host probe, device pack
+            backend="host", entropy_backend="device"
+        ),
     )
     assert ref == full_dev == mixed
     print("full-device compress (plane + fused Huffman bit-pack): "
@@ -122,9 +133,8 @@ def main():
     # only *compressed* bytes cross host→device and the decoded planes feed
     # the fused un-plane consumer in place.  The envelope keys off the
     # container, not the config: any canonical-coder blob qualifies.
-    dev_dec = zipnn.decompress_bytes(
-        ref, cfg_h, backend="device", entropy_backend="device"
-    )
+    full_device = CodecOptions(backend="device", entropy_backend="device")
+    dev_dec = zipnn.decompress_bytes(ref, cfg_h, options=full_device)
     assert dev_dec == raw                              # bit-exact contract
     # decompress_array/delta_decompress additionally take
     # device_resident=True: the restored leaf stays on device as a
@@ -136,8 +146,7 @@ def main():
         np.frombuffer(raw, dtype=ml_dtypes.bfloat16), cfg_h
     )
     leaf = zipnn.decompress_array(
-        ct, cfg_h, backend="device", entropy_backend="device",
-        device_resident=True,
+        ct, cfg_h, options=full_device, device_resident=True,
     )
     assert not isinstance(leaf, np.ndarray)            # jax.Array, on device
     assert bytes(np.asarray(leaf).tobytes()) == raw
@@ -170,6 +179,44 @@ def main():
     print(f"compressed-resident serving: weights at rest {store.ratio_pct:.1f}% "
           f"of raw, peak {store.peak_resident} decoded layers, logits "
           "bit-identical ✓")
+
+    # 11. The unified options API + the KV-cache tier.  The knob sprawl
+    # (threads=/backend=/entropy_backend= on ~20 entry points) collapses
+    # into one frozen CodecOptions bag — legacy kwargs still work behind a
+    # DeprecationWarning, and an explicit legacy kwarg wins over the bag.
+    # ZipNNSession binds config + options once for the whole surface.
+    from repro.core.options import ZipNNSession
+
+    session = ZipNNSession(options=CodecOptions(threads=-1))
+    assert session.decompress_bytes(session.compress_bytes(raw, "bfloat16")) == raw
+    assert session.compress_bytes(raw, "bfloat16") == blob  # same bytes as §1
+    print("ZipNNSession: one options bag, whole surface, bytes identical ✓")
+
+    # The serving-side analogue of the weight store: the KV cache itself.
+    # KVCacheStore keeps the newest hot_window positions uncompressed and
+    # evicts older block_len-sized blocks to per-(key, layer) ZNN1
+    # payloads; each decode step reassembles only the attending layer's
+    # caches (decoded cold blocks + hot suffix + zero tail) — arrays
+    # byte-identical to the untiered cache, so greedy decode logits are
+    # bit-identical while peak cache residency drops to hot buffers +
+    # compressed payloads + one layer in flight.
+    from repro.serve import KVCacheStore, make_kv_tiered_serve_step
+
+    steps = 8
+    kv_store = KVCacheStore(
+        model.init_decode_state(2, steps, start_pos=0),
+        hot_window=3, block_len=2,
+    )
+    tstep = make_kv_tiered_serve_step(model, params, kv_store)
+    su = model.init_decode_state(2, steps, start_pos=0)
+    for _ in range(steps):
+        lu, su = step(params, su, toks)
+        lt = tstep(toks)
+        assert np.asarray(lu).tobytes() == np.asarray(lt).tobytes()
+    assert kv_store.peak_hot_positions <= kv_store.hot_window + kv_store.block_len
+    print(f"KV-cache tier: {kv_store.n_cold_blocks} cold blocks/layer at "
+          f"{100 * kv_store.cold_comp_bytes / max(kv_store.cold_raw_bytes, 1):.1f}% "
+          "of raw, logits bit-identical ✓")
 
     # The byte-identity contract demonstrated above is also enforced
     # statically: `python -m repro.analysis --strict` (zipnn-lint) checks

@@ -69,7 +69,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 # sweep; asserts device blobs byte-identical to host blobs (including the
 # full-device plane+entropy path) AND device decode — plane consumer and
 # device-entropy decoder rows alike — bit-identical to the raw bytes
-# (interpret mode on CPU-only hosts) and writes the result JSON.
+# (interpret mode on CPU-only hosts) and writes the result JSON.  The
+# serve rows double as the serving smokes: ring logits bit-identical and
+# residency <= 2 layers, and the KV-cache tier (serve/kvcache.py) decoded
+# in lockstep with logits asserted bit-identical to the untiered step.
+# The component rows pin the KV/moment/fp8/int8 payload ratios.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
     --backend both --n 120000 --json BENCH_table3_smoke.json
 

@@ -26,6 +26,16 @@ Model
   - explicit ``K=None``            → allowed (None is the "derive from
     config" default everywhere on this surface)
 
+* The unified bag (``core/options.py``) is a knob too: ``options`` rides
+  the same model, so dropping it on an edge is caught like any other.  An
+  edge that binds ``options=`` to a non-None value *supersedes* the three
+  legacy knob checks on that edge — the bag carries them, which is the
+  whole point of the redesign.  ``CodecOptions(...)`` constructor calls
+  themselves are exempt: building a bag from locals (or an intentional
+  constant, e.g. the host fallback for device-skipped leaves) IS the
+  forwarding mechanism, and the edge that consumes the bag is where
+  threading is enforced.
+
 * Callers *without* K in scope are exempt: passing knobs via a config
   object (``CheckpointManager`` / ``CheckpointConfig.zipnn``) is the
   sanctioned config-carried path.
@@ -46,55 +56,77 @@ from .base import Project, SourceFile, Violation
 FAMILY = "knobs"
 RULES = ("knob-dropped", "knob-redefault", "knob-surface")
 
-KNOBS = ("threads", "backend", "entropy_backend")
+LEGACY_KNOBS = ("threads", "backend", "entropy_backend")
+BAG = "options"
+KNOBS = LEGACY_KNOBS + (BAG,)
 
 SCOPE = (
     "src/repro/core/zipnn.py",
     "src/repro/core/engine.py",
+    "src/repro/core/options.py",
     "src/repro/checkpoint/",
     "src/repro/distributed/",
     "src/repro/serve/",
 )
 
+# The bag constructor: building a CodecOptions from knob locals (or an
+# intentional constant) is itself the forwarding act — its edges are exempt.
+_BAG_CLASS = "CodecOptions"
+
 # The public-surface contract: entry point -> knobs it must accept.
 # Decompression takes entropy_backend too: the container records the
 # *coder*, but the knob picks where its Huffman chunks decode (host work
 # items vs the device decoder kernel) — bytes identical either way.
+# Every legacy entry point must now ALSO accept the unified options= bag
+# (the api_redesign contract); new surfaces (session, KV tier) are
+# bag-only — they never grew the loose kwargs.
 _CBE = frozenset(("threads", "backend", "entropy_backend"))
-_CB = frozenset(("threads", "backend"))
+_CBEO = _CBE | frozenset((BAG,))
+_O = frozenset((BAG,))
 SURFACE: Dict[str, Dict[str, frozenset]] = {
     "src/repro/core/zipnn.py": {
-        "compress_bytes": _CBE,
-        "compress_array": _CBE,
-        "compress_pytree": _CBE,
-        "delta_compress": _CBE,
-        "delta_compress_batched": _CBE,
-        "decompress_bytes": _CBE,
-        "decompress_array": _CBE,
-        "decompress_pytree": _CBE,
-        "delta_decompress": _CBE,
+        "compress_bytes": _CBEO,
+        "compress_array": _CBEO,
+        "compress_pytree": _CBEO,
+        "delta_compress": _CBEO,
+        "delta_compress_batched": _CBEO,
+        "decompress_bytes": _CBEO,
+        "decompress_array": _CBEO,
+        "decompress_pytree": _CBEO,
+        "delta_decompress": _CBEO,
     },
     "src/repro/core/engine.py": {
-        "compress_file": _CBE,
-        "CompressWriter": _CBE,
-        "decompress_file": _CBE,
-        "DecompressReader": _CBE,
+        "compress_file": _CBEO,
+        "CompressWriter": _CBEO,
+        "decompress_file": _CBEO,
+        "DecompressReader": _CBEO,
+    },
+    # The bag itself: CodecOptions must keep its three codec-knob fields
+    # (device_resident is a semantic flag, outside the knob set), the shim
+    # must accept bag + legacy kwargs, the session is bag-only.
+    "src/repro/core/options.py": {
+        "CodecOptions": _CBE,
+        "resolve_options": _CBEO,
+        "ZipNNSession": _O,
     },
     "src/repro/checkpoint/hub.py": {
-        "simulate_transfer": _CBE,
-        "simulate_file_transfer": _CBE,
+        "simulate_transfer": _CBEO,
+        "simulate_file_transfer": _CBEO,
     },
     "src/repro/checkpoint/manager.py": {
-        "CheckpointConfig": _CBE,
+        "CheckpointConfig": _CBEO,
     },
     "src/repro/distributed/grad_sync.py": {
-        "GradSync": _CBE,
+        "GradSync": _CBEO,
     },
     # The compressed-resident serving store carries the knobs for every
     # ring decode; the ring scheduler itself is knob-free (store-carried,
     # like CheckpointManager's config-carried path).
     "src/repro/serve/compressed.py": {
-        "CompressedParamStore": _CBE,
+        "CompressedParamStore": _CBEO,
+    },
+    "src/repro/serve/kvcache.py": {
+        "KVCacheStore": _O,
     },
 }
 
@@ -232,11 +264,23 @@ def check(project: Project) -> List[Violation]:
                 tail = fn.id
             else:
                 continue
+            if tail == _BAG_CLASS:
+                continue  # bag construction IS the forwarding mechanism
             candidates = reg.get(tail, ())
             caller = _caller_knobs(sf, node)
             for cand in candidates:
+                # An edge that forwards a non-None options= bag satisfies
+                # the three legacy knobs — they ride inside it.
+                bag_bound = False
+                if BAG in cand.params or cand.has_kwargs:
+                    bfound, bval = _passed_value(node, cand, BAG)
+                    bag_bound = bfound and not (
+                        isinstance(bval, ast.Constant) and bval.value is None
+                    )
                 for knob in KNOBS:
                     if knob not in caller or knob not in cand.params:
+                        continue
+                    if bag_bound and knob != BAG:
                         continue
                     found, value = _passed_value(node, cand, knob)
                     if not found:

@@ -16,6 +16,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import zipnn
+from repro.core.options import resolve_options
 
 # Channel bandwidths (MB/s) — paper §5.3 measurements.
 CHANNELS: Dict[str, float] = {
@@ -69,30 +70,32 @@ def simulate_transfer(
     *,
     direction: str = "download",
     config: zipnn.ZipNNConfig = zipnn.DEFAULT,
+    options: Optional[zipnn.CodecOptions] = None,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
 ) -> TransferReport:
-    """Measure one hub transfer.  ``threads`` fans the codec's (plane,
-    chunk) work items across the engine pool — the hub-scale serving knob
-    (codec time scales down with cores, wire time is fixed); ``backend``
-    selects both the plane-producer path on upload and the plane-consumer
-    path on download (host numpy vs fused device dispatch, bytes
-    identical); ``entropy_backend`` overrides just the Huffman entropy
-    stage on both directions — the bit-pack kernel on upload, the decoder
-    kernel on download (see core/device_entropy.py — mixed mode)."""
+    """Measure one hub transfer.  Codec knobs arrive as one
+    ``CodecOptions`` bag (``options=``; the loose kwargs still work with a
+    DeprecationWarning and win over the bag when set).  ``threads`` fans
+    the codec's (plane, chunk) work items across the engine pool — the
+    hub-scale serving knob (codec time scales down with cores, wire time
+    is fixed); ``backend`` selects both the plane-producer path on upload
+    and the plane-consumer path on download (host numpy vs fused device
+    dispatch, bytes identical); ``entropy_backend`` overrides just the
+    Huffman entropy stage on both directions — the bit-pack kernel on
+    upload, the decoder kernel on download (see core/device_entropy.py —
+    mixed mode)."""
+    opts = resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend, _stacklevel=3,
+    )
     bw = CHANNELS[channel] * 1e6
     t0 = time.perf_counter()
-    blob = zipnn.compress_bytes(
-        data, dtype_name, config, threads=threads, backend=backend,
-        entropy_backend=entropy_backend,
-    )
+    blob = zipnn.compress_bytes(data, dtype_name, config, options=opts)
     t_comp = time.perf_counter() - t0
     t0 = time.perf_counter()
-    back = zipnn.decompress_bytes(
-        blob, config, threads=threads, backend=backend,
-        entropy_backend=entropy_backend,
-    )
+    back = zipnn.decompress_bytes(blob, config, options=opts)
     t_dec = time.perf_counter() - t0
     if back != bytes(data):
         # A real exception, not `assert`: the losslessness guard must
@@ -112,10 +115,8 @@ def simulate_transfer(
 def _overlapped_download(
     comp_path: str,
     config: zipnn.ZipNNConfig,
-    threads: Optional[int],
+    opts: "zipnn.CodecOptions",
     bw: float,
-    backend: Optional[str] = None,
-    entropy_backend: Optional[str] = None,
 ) -> Tuple[float, float]:
     """Pipelined download time over a ``ZNS1`` container.
 
@@ -144,10 +145,7 @@ def _overlapped_download(
         wire_total += wire
         total += wire if prev_dec is None else max(wire, prev_dec)
         t0 = time.perf_counter()
-        zipnn.decompress_bytes(
-            blob, config, threads=threads, backend=backend,
-            entropy_backend=entropy_backend,
-        )
+        zipnn.decompress_bytes(blob, config, options=opts)
         prev_dec = time.perf_counter() - t0
     if prev_dec is not None:
         total += prev_dec
@@ -162,6 +160,7 @@ def simulate_file_transfer(
     direction: str = "download",
     config: zipnn.ZipNNConfig = zipnn.DEFAULT,
     window_bytes: Optional[int] = None,
+    options: Optional[zipnn.CodecOptions] = None,
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
@@ -180,6 +179,10 @@ def simulate_file_transfer(
 
     from repro.core import engine
 
+    opts = resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend, _stacklevel=3,
+    )
     window = engine.DEFAULT_WINDOW if window_bytes is None else window_bytes
     bw = CHANNELS[channel] * 1e6
     with tempfile.TemporaryDirectory() as td:
@@ -187,22 +190,17 @@ def simulate_file_transfer(
         t0 = time.perf_counter()
         raw_bytes, comp_bytes = engine.compress_file(
             path, comp_path, dtype_name, config,
-            window_bytes=window, threads=threads, backend=backend,
-            entropy_backend=entropy_backend,
+            window_bytes=window, options=opts,
         )
         t_comp = time.perf_counter() - t0
         t0 = time.perf_counter()
         with open(os.devnull, "wb") as sink:
-            n = engine.decompress_file(
-                comp_path, sink, config, threads=threads, backend=backend,
-                entropy_backend=entropy_backend,
-            )
+            n = engine.decompress_file(comp_path, sink, config, options=opts)
         t_dec = time.perf_counter() - t0
         overlap_total = overlap_codec = 0.0
         if direction == "download":
             overlap_total, overlap_codec = _overlapped_download(
-                comp_path, config, threads, bw, backend=backend,
-                entropy_backend=entropy_backend,
+                comp_path, config, opts, bw,
             )
     if n != raw_bytes:
         raise IOError("streamed hub transfer must be lossless")

@@ -7,6 +7,13 @@ This is the paper's §2.1.3/§4.2 use case as a production subsystem:
 * between periodic **bases** (every ``base_every`` saves), checkpoints are
   stored as XOR **deltas against the last base** — recovery cost is bounded
   at base+one-delta, never a chain (§4.2 "Periodic Base");
+* **optimizer moments** (AdamW ``m``/``v`` trees — the fp32 bulk of a
+  mixed-precision checkpoint) are instead stored as deltas **against the
+  previous save**: moments are EMAs, so step-over-step deltas are far
+  sparser than vs-base deltas.  Restore replays the chain (bounded at
+  ``base_every`` links — bases always store moments in full) bit-exactly,
+  memoizing each intermediate save so a chain of k loads each checkpoint
+  once, not O(k²) times;
 * §4.2 auto-detection picks Huffman vs LZ per chunk of each delta;
 * saves are **async** (compression+IO off the training critical path),
   **atomic** (tmp dir + os.replace — a crash mid-save can never corrupt the
@@ -32,6 +39,7 @@ import jax
 import numpy as np
 
 from repro.core import zipnn
+from repro.optim.adamw import MOMENT_KEYS, is_moment_path
 
 PyTree = Any
 
@@ -56,9 +64,23 @@ class CheckpointConfig:
     # Entropy-stage override for mixed mode (None follows `backend`):
     # 'host' | 'device' | 'auto' — see core/device_entropy.py.
     entropy_backend: Optional[str] = None
+    # The unified knob bag (core/options.py): non-None fields fold into the
+    # three legacy fields above (which still win when set explicitly), then
+    # everything merges into the carried ZipNNConfig as before.
+    options: Optional[zipnn.CodecOptions] = None
+    # Flat-key prefixes treated as optimizer moments (delta-vs-previous-save
+    # chains).  () disables moment chaining entirely.
+    moment_keys: Tuple[str, ...] = MOMENT_KEYS
     zipnn: zipnn.ZipNNConfig = dataclasses.field(default_factory=zipnn.ZipNNConfig)
 
     def __post_init__(self) -> None:
+        if self.options is not None:
+            if self.options.threads is not None and not self.threads:
+                self.threads = self.options.threads
+            if self.options.backend is not None and self.backend == "host":
+                self.backend = self.options.backend
+            if self.options.entropy_backend is not None and self.entropy_backend is None:
+                self.entropy_backend = self.options.entropy_backend
         if self.threads and not self.zipnn.threads:
             self.zipnn = dataclasses.replace(self.zipnn, threads=self.threads)
         if self.backend != "host" and self.zipnn.plane_backend == "host":
@@ -96,6 +118,12 @@ class CheckpointManager:
         self._save_count = 0
         self._last_base_step: Optional[int] = None
         self._last_base_flat: Optional[Dict[str, np.ndarray]] = None
+        # Moment-chain bookkeeping: the previous save's moment arrays (kept
+        # in host RAM — fp32 moments of the model, one save's worth) and its
+        # step.  Lost on restart, in which case the next save simply stores
+        # moments vs-base/full again — chains never span a process restart.
+        self._last_save_step: Optional[int] = None
+        self._last_moment_flat: Optional[Dict[str, np.ndarray]] = None
         self._errors: List[BaseException] = []
         # resume bookkeeping from disk
         for step, kind, base in self._scan():
@@ -119,13 +147,24 @@ class CheckpointManager:
         base_step = None if is_base else self._last_base_step
         if base_flat is None and not is_base:
             is_base = True                      # lost base in memory ⇒ full save
+        prev_flat = None if is_base else self._last_moment_flat
+        prev_step = None if is_base else self._last_save_step
 
         def work():
             try:
-                self._write(step, flat, is_base, base_flat, base_step)
+                self._write(
+                    step, flat, is_base, base_flat, base_step,
+                    prev_flat, prev_step,
+                )
                 if is_base:
                     self._last_base_step = step
                     self._last_base_flat = flat
+                if self.cfg.moment_keys:
+                    self._last_moment_flat = {
+                        k: v for k, v in flat.items()
+                        if is_moment_path(k, self.cfg.moment_keys)
+                    }
+                    self._last_save_step = step
                 self._gc()
             except BaseException as e:          # surfaced on next wait()
                 self._errors.append(e)
@@ -152,11 +191,27 @@ class CheckpointManager:
         is_base: bool,
         base_flat: Optional[Dict[str, np.ndarray]],
         base_step: Optional[int],
+        prev_flat: Optional[Dict[str, np.ndarray]] = None,
+        prev_step: Optional[int] = None,
     ) -> None:
         tmp = os.path.join(self.cfg.directory, f".tmp_step_{step}")
         final = os.path.join(self.cfg.directory, f"step_{step}")
         os.makedirs(tmp, exist_ok=True)
         keys = sorted(flat)
+        # Optimizer moments delta against the PREVIOUS save (EMA state moves
+        # a little every step, so vs-prev deltas are much sparser than
+        # vs-base) — bases still store moments in full, which bounds the
+        # restore chain at base_every links.
+        prev_keys = [
+            k for k in keys
+            if prev_flat is not None
+            and prev_step is not None
+            and is_moment_path(k, self.cfg.moment_keys)
+            and k in prev_flat
+            and prev_flat[k].shape == flat[k].shape
+            and prev_flat[k].dtype == flat[k].dtype
+        ]
+        prev_set = frozenset(prev_keys)
         # Delta leaves go through ONE batched call: with the device backend,
         # same-dtype (new, base) pairs pack into a single fused
         # XOR→byte-group→probe dispatch (produce_planes_batched(bases=...))
@@ -164,7 +219,10 @@ class CheckpointManager:
         # identical to the leaf-at-a-time path on every backend.
         delta_keys = [
             k for k in keys
-            if not is_base and k in base_flat and base_flat[k].shape == flat[k].shape
+            if not is_base
+            and k not in prev_set
+            and k in base_flat
+            and base_flat[k].shape == flat[k].shape
         ]
         delta_cts = dict(
             zip(
@@ -176,12 +234,25 @@ class CheckpointManager:
                 ),
             )
         )
+        moment_cts = dict(
+            zip(
+                prev_keys,
+                zipnn.delta_compress_batched(
+                    [flat[k] for k in prev_keys],
+                    [prev_flat[k] for k in prev_keys],
+                    self.cfg.zipnn,
+                ),
+            )
+        )
         entries = []
         offset = 0
         with open(os.path.join(tmp, "data.bin"), "wb") as f:
             for key in keys:
                 arr = flat[key]
-                if key in delta_cts:
+                if key in moment_cts:
+                    ct = moment_cts[key]
+                    kind = "delta_prev"
+                elif key in delta_cts:
                     ct = delta_cts[key]
                     kind = "delta"
                 else:
@@ -207,6 +278,7 @@ class CheckpointManager:
             "step": step,
             "kind": "base" if is_base else "delta",
             "base_step": base_step,
+            "prev_step": prev_step if prev_keys else None,
             "comp_bytes": offset,
             "raw_bytes": sum(e["raw"] for e in entries),
             "entries": entries,
@@ -238,8 +310,19 @@ class CheckpointManager:
         return steps[-1][0] if steps else None
 
     def _load_flat(
-        self, step: int, device_resident: bool = False
+        self,
+        step: int,
+        device_resident: bool = False,
+        _cache: Optional[Dict[int, Dict[str, np.ndarray]]] = None,
     ) -> Dict[str, np.ndarray]:
+        # Memoize per restore call: a delta save references both its base
+        # (weights) and the previous save (moments, "delta_prev"), and the
+        # previous save references the base again — without the cache the
+        # moment chain would re-decode every ancestor O(k^2) times.
+        if _cache is None:
+            _cache = {}
+        if step in _cache:
+            return _cache[step]
         d = os.path.join(self.cfg.directory, f"step_{step}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
@@ -251,7 +334,14 @@ class CheckpointManager:
             # device-resident restore XORs against a device-resident base
             # (fused on device), never bouncing either through host memory.
             base_flat = self._load_flat(
-                manifest["base_step"], device_resident=device_resident
+                manifest["base_step"], device_resident=device_resident,
+                _cache=_cache,
+            )
+        prev_flat = None
+        if manifest.get("prev_step") is not None:
+            prev_flat = self._load_flat(
+                manifest["prev_step"], device_resident=device_resident,
+                _cache=_cache,
             )
         out = {}
         full_entries = []
@@ -264,6 +354,11 @@ class CheckpointManager:
             if e["kind"] == "delta":
                 out[e["key"]] = zipnn.delta_decompress(
                     ct, base_flat[e["key"]], self.cfg.zipnn,
+                    device_resident=device_resident,
+                )
+            elif e["kind"] == "delta_prev":
+                out[e["key"]] = zipnn.delta_decompress(
+                    ct, prev_flat[e["key"]], self.cfg.zipnn,
                     device_resident=device_resident,
                 )
             else:
@@ -286,6 +381,7 @@ class CheckpointManager:
             )
             for e, arr in zip(full_entries, arrays):
                 out[e["key"]] = arr
+        _cache[step] = out
         return out
 
     def restore(

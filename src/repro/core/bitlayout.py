@@ -21,6 +21,21 @@ costs one shift+or per element.
 Byte grouping (paper §3.2, Fig. 5) then splits the (rotated) values into
 per-byte planes: plane 0 = exponent byte, planes 1..k = fraction bytes.
 Each plane is compressed independently.
+
+**Sub-byte layouts (fp8).**  For one-byte floats the exponent field does
+not fill a byte, so whole-byte grouping would leave the skewed exponent
+bits interleaved with sign/fraction noise in a single plane — order-0
+entropy coding gains nothing from a plain rotation (it only permutes the
+byte histogram).  fp8 layouts therefore set ``sub_byte``: after the
+rotate-left-1 (which parks the exponent at the top of the byte —
+``e4m3``: ``[eeee|fffs]``, ``e5m2``: ``[eeeee|ffs]``), *element pairs*
+are split at the nibble: plane 0 packs the two high nibbles
+(exponent-dominated), plane 1 the two low nibbles (fraction/sign).  The
+split is a bijection on byte pairs, hence lossless; bodies align to 2
+bytes (``layout.align``), with an odd trailing element riding the
+container's ``TAIL`` mechanism.  ``int8`` gets its own whole-byte layout
+(no rotation — two's complement already clusters small magnitudes for the
+order-0 histogram).
 """
 
 from __future__ import annotations
@@ -52,6 +67,7 @@ class BitLayout:
     exp_bits: int
     frac_bits: int
     rotate: bool               # apply rotate-left-1 so plane0 == exponent
+    sub_byte: bool = False     # nibble-split element pairs (fp8 layouts)
 
     @property
     def total_bits(self) -> int:
@@ -59,7 +75,13 @@ class BitLayout:
 
     @property
     def n_planes(self) -> int:
-        return self.itemsize
+        return 2 if self.sub_byte else self.itemsize
+
+    @property
+    def align(self) -> int:
+        """Plane-split granule in bytes: bodies must be a multiple of this
+        (sub-byte layouts split element *pairs*, so 2 even at itemsize 1)."""
+        return 2 if self.sub_byte else self.itemsize
 
 
 _LAYOUT_FP32 = BitLayout("fp32", 4, np.dtype(np.uint32), 1, 8, 23, True)
@@ -70,9 +92,20 @@ _LAYOUT_FP64 = BitLayout("fp64", 8, np.dtype(np.uint64), 1, 11, 52, True)
 # exponent; paper §3: "tensors of parameters that contain integers ... hardly
 # affect the model compression ratio" — we still byte-group them).
 _LAYOUT_U8 = BitLayout("u8", 1, np.dtype(np.uint8), 0, 0, 8, False)
+# int8 quantized tensors: identical plane geometry to u8 but carried as a
+# distinct layout so corpus/bench rows and container headers name it.
+_LAYOUT_I8 = BitLayout("i8", 1, np.dtype(np.uint8), 0, 0, 8, False)
 _LAYOUT_I32 = BitLayout("i32", 4, np.dtype(np.uint32), 0, 0, 32, False)
 _LAYOUT_I64 = BitLayout("i64", 8, np.dtype(np.uint64), 0, 0, 64, False)
 _LAYOUT_U16 = BitLayout("u16", 2, np.dtype(np.uint16), 0, 0, 16, False)
+# fp8 (paper-adjacent: the component-compression papers' quantized formats).
+# rotate=True parks the exponent at the byte top before the nibble split.
+_LAYOUT_F8E4M3 = BitLayout(
+    "f8e4", 1, np.dtype(np.uint8), 1, 4, 3, True, sub_byte=True
+)
+_LAYOUT_F8E5M2 = BitLayout(
+    "f8e5", 1, np.dtype(np.uint8), 1, 5, 2, True, sub_byte=True
+)
 
 LAYOUTS: Dict[str, BitLayout] = {
     "float32": _LAYOUT_FP32,
@@ -80,8 +113,15 @@ LAYOUTS: Dict[str, BitLayout] = {
     "float16": _LAYOUT_FP16,
     "float64": _LAYOUT_FP64,
     "uint8": _LAYOUT_U8,
-    "int8": _LAYOUT_U8,
+    "int8": _LAYOUT_I8,
     "bool": _LAYOUT_U8,
+    # ml_dtypes fp8 family: same (sign, exp, frac) geometry per pair; the
+    # fn/fnuz bias variants share the bit layout, which is all we touch.
+    "float8_e4m3fn": _LAYOUT_F8E4M3,
+    "float8_e4m3": _LAYOUT_F8E4M3,
+    "float8_e4m3fnuz": _LAYOUT_F8E4M3,
+    "float8_e5m2": _LAYOUT_F8E5M2,
+    "float8_e5m2fnuz": _LAYOUT_F8E5M2,
     "int32": _LAYOUT_I32,
     "uint32": _LAYOUT_I32,
     "int64": _LAYOUT_I64,
@@ -158,10 +198,18 @@ def to_planes(
     """
     if raw.dtype != np.uint8:
         raise TypeError("to_planes expects a uint8 byte view")
-    if raw.size % layout.itemsize:
+    if raw.size % layout.align:
         raise ValueError(
-            f"buffer of {raw.size} bytes is not a multiple of itemsize {layout.itemsize}"
+            f"buffer of {raw.size} bytes is not a multiple of align {layout.align}"
         )
+    if layout.sub_byte:
+        u = raw
+        if layout.rotate:
+            u = _rotl1(np.ascontiguousarray(u), 8, pool)
+        pairs = u.reshape(-1, 2)
+        hi = ((pairs[:, 0] & 0xF0) | (pairs[:, 1] >> 4)).astype(np.uint8)
+        lo = (((pairs[:, 0] & 0x0F) << 4) | (pairs[:, 1] & 0x0F)).astype(np.uint8)
+        return (np.ascontiguousarray(hi), np.ascontiguousarray(lo))
     if layout.itemsize == 1:
         return (np.ascontiguousarray(raw),)
     u = raw.view(layout.uint_dtype)
@@ -189,6 +237,17 @@ def from_planes(
     """
     if len(planes) != layout.n_planes:
         raise ValueError(f"expected {layout.n_planes} planes, got {len(planes)}")
+    if layout.sub_byte:
+        hi, lo = planes
+        if hi.size != lo.size:
+            raise ValueError("sub-byte planes must pair 1:1")
+        out = np.empty(hi.size * 2, dtype=np.uint8)
+        pairs = out.reshape(-1, 2)
+        pairs[:, 0] = (hi & 0xF0) | (lo >> 4)
+        pairs[:, 1] = ((hi & 0x0F) << 4) | (lo & 0x0F)
+        if layout.rotate:
+            out = _rotr1(out, 8, pool)
+        return out
     if layout.itemsize == 1:
         return np.ascontiguousarray(planes[0])
     n = planes[0].size

@@ -89,6 +89,8 @@ import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import IO, Iterator, Optional, Tuple, Union
 
+from .options import CodecOptions, resolve_options
+
 __all__ = [
     "DEFAULT_WINDOW",
     "resolve_threads",
@@ -220,16 +222,24 @@ class CompressWriter:
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
+        options: Optional[CodecOptions] = None,
     ):
         from . import bitlayout, zipnn   # lazy: zipnn imports this module
 
+        opts = resolve_options(
+            options, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
+        )
         self._config = zipnn.DEFAULT if config is None else config
-        self._threads = self._config.threads if threads is None else threads
-        self._backend = backend
-        self._entropy_backend = entropy_backend
+        self._threads = self._config.threads if opts.threads is None else opts.threads
+        self._backend = opts.backend
+        self._entropy_backend = opts.entropy_backend
         self._dtype_name = dtype_name
-        itemsize = bitlayout.layout_for(dtype_name).itemsize
-        self._window = max(window_bytes - window_bytes % itemsize, itemsize)
+        # Windows align to the layout's plane-split granule (== itemsize for
+        # whole-byte layouts, 2 for the sub-byte fp8 nibble planes) so only
+        # the final frame can carry an unaligned TAIL remainder.
+        align = bitlayout.layout_for(dtype_name).align
+        self._window = max(window_bytes - window_bytes % align, align)
         self._buf = bytearray()
         self._fp, self._own = _open(fp, "wb")
         self._closed = False
@@ -263,8 +273,10 @@ class CompressWriter:
 
         return zipnn.compress_bytes(
             raw, self._dtype_name, self._config,
-            threads=self._threads, backend=self._backend,
-            entropy_backend=self._entropy_backend,
+            options=CodecOptions(
+                threads=self._threads, backend=self._backend,
+                entropy_backend=self._entropy_backend,
+            ),
         )
 
     def _submit(self, raw: bytes) -> None:
@@ -380,13 +392,18 @@ class DecompressReader:
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
+        options: Optional[CodecOptions] = None,
     ):
         from . import zipnn
 
+        opts = resolve_options(
+            options, threads=threads, backend=backend,
+            entropy_backend=entropy_backend,
+        )
         self._config = zipnn.DEFAULT if config is None else config
-        self._threads = self._config.threads if threads is None else threads
-        self._backend = backend
-        self._entropy_backend = entropy_backend
+        self._threads = self._config.threads if opts.threads is None else opts.threads
+        self._backend = opts.backend
+        self._entropy_backend = opts.entropy_backend
         self._fp, self._own = _open(fp, "rb")
         hdr = self._fp.read(_SHDR.size)
         if len(hdr) < _SHDR.size:
@@ -406,8 +423,11 @@ class DecompressReader:
         from . import zipnn
 
         return zipnn.decompress_bytes(
-            blob, self._config, threads=self._threads, backend=self._backend,
-            entropy_backend=self._entropy_backend,
+            blob, self._config,
+            options=CodecOptions(
+                threads=self._threads, backend=self._backend,
+                entropy_backend=self._entropy_backend,
+            ),
         )
 
     def _frame_iter(self) -> Iterator[bytes]:
@@ -554,6 +574,7 @@ def compress_file(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> Tuple[int, int]:
     """Stream-compress ``src`` into a ``ZNS1`` container at ``dst``.
 
@@ -562,12 +583,15 @@ def compress_file(
     read of window k+1 overlaps window k's compression (see
     :class:`CompressWriter`).  Returns ``(raw_bytes, comp_bytes)``.
     """
+    opts = resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
+    )
     fin, own_in = _open(src, "rb")
     try:
         with CompressWriter(
             dst, dtype_name, config,
-            window_bytes=window_bytes, threads=threads, backend=backend,
-            entropy_backend=entropy_backend,
+            window_bytes=window_bytes, options=opts,
         ) as w:
             while True:
                 data = fin.read(w._window)
@@ -588,14 +612,16 @@ def decompress_file(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> int:
     """Stream-decompress a ``ZNS1`` container; returns raw bytes written."""
+    opts = resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend,
+    )
     fout, own_out = _open(dst, "wb")
     try:
-        with DecompressReader(
-            src, config, threads=threads, backend=backend,
-            entropy_backend=entropy_backend,
-        ) as r:
+        with DecompressReader(src, config, options=opts) as r:
             total = 0
             for raw in r.frames():
                 fout.write(raw)

@@ -1,0 +1,219 @@
+"""Unified codec options: one frozen bag for the knobs every entry point takes.
+
+PRs 1–8 grew the same four keyword arguments — ``threads=``, ``backend=``,
+``entropy_backend=`` and (on decode paths) ``device_resident=`` — across
+~20 entry points: the :mod:`.zipnn` byte/array/pytree/delta functions, the
+streaming engine, the checkpoint manager and hub, grad-sync, and the
+serving stores.  Each call site threaded the three codec knobs by hand,
+and ``zipnn-lint`` had to police every edge per-kwarg.
+
+:class:`CodecOptions` collapses them into one frozen dataclass that rides
+an ``options=`` keyword instead:
+
+    opts = CodecOptions(threads=-1, backend="device")
+    blob = zipnn.compress_bytes(raw, "bfloat16", options=opts)
+
+The legacy kwargs keep working through a deprecation shim
+(:func:`resolve_options`): an explicit legacy kwarg **overrides** the
+corresponding ``options`` field and emits a :class:`DeprecationWarning`.
+``None`` fields mean "defer to the ``ZipNNConfig``" exactly as the legacy
+``None`` defaults did, so the resolution precedence is unchanged:
+
+    explicit legacy kwarg  >  options field  >  ZipNNConfig field
+
+``device_resident`` also lives on the options bag (it rides the same
+calls), but the standalone kwarg is *not* deprecated: it is a semantic
+flag — it changes the return type — not a performance knob, and
+``docs/INVARIANTS.md`` keeps it outside the byte-identity knob set.
+
+:class:`ZipNNSession` is the facade over the whole surface: bind a config
+and an options bag once, then call ``session.compress_pytree(...)`` /
+``session.decompress_array(...)`` without re-threading anything.  Bytes
+are identical to the legacy per-kwarg calls on every combination — the
+options bag only *routes* the same values, which ``tests/test_options.py``
+asserts and ``zipnn-lint``'s knob checker enforces statically (an edge
+that forwards ``options=`` satisfies all three legacy knobs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional
+
+__all__ = ["CodecOptions", "DEFAULT_OPTIONS", "resolve_options", "ZipNNSession"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecOptions:
+    """Per-call codec knobs, unified.
+
+    Every field defaults to "defer to the config" (``None``) so a default
+    ``CodecOptions()`` is exactly the legacy no-kwargs call.  The bag is
+    frozen and hashable: share one instance across threads, stores and
+    sessions freely.
+
+    threads:          0/1 serial, N>1 pool workers, -1 all cores.
+    backend:          plane-stage backend — 'host' | 'device' | 'auto'.
+    entropy_backend:  entropy-stage backend — None follows ``backend``.
+    device_resident:  decode paths only — keep restored leaves on device
+                      as ``jax.Array``s (zero device→host bounce).
+
+    Bytes are identical across every setting of the first three — they are
+    wall-clock knobs, enforced by ``tests/parity.py`` and zipnn-lint.
+    """
+
+    threads: Optional[int] = None
+    backend: Optional[str] = None
+    entropy_backend: Optional[str] = None
+    device_resident: bool = False
+
+    def replace(self, **changes: Any) -> "CodecOptions":
+        return dataclasses.replace(self, **changes)
+
+
+DEFAULT_OPTIONS = CodecOptions()
+
+_LEGACY_MSG = (
+    "passing threads=/backend=/entropy_backend= per call is deprecated; "
+    "pass options=CodecOptions(...) instead (explicit legacy kwargs still "
+    "override the options fields)"
+)
+
+
+def resolve_options(
+    options: Optional[CodecOptions] = None,
+    *,
+    threads: Optional[int] = None,
+    backend: Optional[str] = None,
+    entropy_backend: Optional[str] = None,
+    device_resident: Optional[bool] = None,
+    _stacklevel: int = 4,
+) -> CodecOptions:
+    """Merge legacy per-call kwargs onto an options bag.
+
+    Explicit legacy kwargs win over the corresponding ``options`` field and
+    emit one :class:`DeprecationWarning` (the three codec knobs only —
+    ``device_resident`` stays a supported standalone flag).  Returns a
+    :class:`CodecOptions` whose fields are fully merged; ``None`` fields
+    still mean "defer to the ``ZipNNConfig``" downstream.
+    """
+    if options is None:
+        options = DEFAULT_OPTIONS
+    legacy: Dict[str, Any] = {}
+    if threads is not None:
+        legacy["threads"] = threads
+    if backend is not None:
+        legacy["backend"] = backend
+    if entropy_backend is not None:
+        legacy["entropy_backend"] = entropy_backend
+    if legacy:
+        warnings.warn(_LEGACY_MSG, DeprecationWarning, stacklevel=_stacklevel)
+    if device_resident is not None:
+        legacy["device_resident"] = device_resident
+    return dataclasses.replace(options, **legacy) if legacy else options
+
+
+class ZipNNSession:
+    """Bind a :class:`~repro.core.zipnn.ZipNNConfig` + :class:`CodecOptions`
+    once; call the whole ZipNN surface without re-threading knobs.
+
+        session = ZipNNSession(options=CodecOptions(backend="device"))
+        manifest = session.compress_pytree(params)
+        back = session.decompress_pytree(manifest)
+
+    Every method produces bytes identical to the corresponding module-level
+    call with the same config/options — the session is pure routing.
+    """
+
+    def __init__(
+        self,
+        config: Optional[Any] = None,
+        options: CodecOptions = DEFAULT_OPTIONS,
+    ) -> None:
+        from . import zipnn  # lazy: zipnn imports this module
+
+        self.config = zipnn.DEFAULT if config is None else config
+        self.options = options
+
+    def _opts(self, device_resident: Optional[bool]) -> CodecOptions:
+        if device_resident is None:
+            return self.options
+        return dataclasses.replace(self.options, device_resident=device_resident)
+
+    # -- byte streams -------------------------------------------------------
+    def compress_bytes(self, raw: Any, dtype_name: str, *, delta: bool = False) -> bytes:
+        from . import zipnn
+
+        return zipnn.compress_bytes(
+            raw, dtype_name, self.config, delta=delta, options=self.options
+        )
+
+    def decompress_bytes(self, blob: bytes) -> bytes:
+        from . import zipnn
+
+        return zipnn.decompress_bytes(blob, self.config, options=self.options)
+
+    # -- arrays / pytrees ---------------------------------------------------
+    def compress_array(self, arr: Any) -> "Any":
+        from . import zipnn
+
+        return zipnn.compress_array(arr, self.config, options=self.options)
+
+    def decompress_array(
+        self, ct: Any, *, device_resident: Optional[bool] = None
+    ) -> Any:
+        from . import zipnn
+
+        return zipnn.decompress_array(
+            ct, self.config, options=self._opts(device_resident)
+        )
+
+    def compress_pytree(self, tree: Any) -> Dict[str, Any]:
+        from . import zipnn
+
+        return zipnn.compress_pytree(tree, self.config, options=self.options)
+
+    def decompress_pytree(
+        self, manifest: Dict[str, Any], *, device_resident: Optional[bool] = None
+    ) -> Any:
+        from . import zipnn
+
+        return zipnn.decompress_pytree(
+            manifest, self.config, options=self._opts(device_resident)
+        )
+
+    # -- deltas (§4.2) ------------------------------------------------------
+    def delta_compress(self, new: Any, base: Any) -> Any:
+        from . import zipnn
+
+        return zipnn.delta_compress(new, base, self.config, options=self.options)
+
+    def delta_compress_batched(self, news: Any, bases: Any) -> Any:
+        from . import zipnn
+
+        return zipnn.delta_compress_batched(
+            news, bases, self.config, options=self.options
+        )
+
+    def delta_decompress(
+        self, ct: Any, base: Any, *, device_resident: Optional[bool] = None
+    ) -> Any:
+        from . import zipnn
+
+        return zipnn.delta_decompress(
+            ct, base, self.config, options=self._opts(device_resident)
+        )
+
+    # -- streaming files ----------------------------------------------------
+    def compress_file(self, src: str, dst: str, dtype_name: str, **kw: Any) -> Any:
+        from . import zipnn
+
+        return zipnn.compress_file(
+            src, dst, dtype_name, self.config, options=self.options, **kw
+        )
+
+    def decompress_file(self, src: str, dst: str, **kw: Any) -> Any:
+        from . import zipnn
+
+        return zipnn.decompress_file(src, dst, self.config, options=self.options, **kw)

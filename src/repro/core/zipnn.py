@@ -59,6 +59,14 @@ additionally take ``device_resident=True`` to keep the restored leaf on
 device as a ``jax.Array`` (zero device→host bounce — the
 ``shard_restore`` path).  Decoded bits are identical across
 ``backend`` × ``entropy_backend`` × ``threads`` everywhere.
+
+All of the above knobs also ride a single frozen bag: every entry point
+takes ``options=CodecOptions(threads=..., backend=..., entropy_backend=...,
+device_resident=...)`` (see :mod:`.options`), and :class:`ZipNNSession`
+binds a config + options once for the whole surface.  The per-knob kwargs
+keep working through a deprecation shim — an explicit legacy kwarg
+overrides the options field and warns — and bytes are identical either
+way.
 """
 
 from __future__ import annotations
@@ -75,9 +83,16 @@ from .engine import (             # noqa: F401  (re-exported streaming API)
     compress_file,
     decompress_file,
 )
+from .options import (            # noqa: F401  (re-exported options API)
+    CodecOptions,
+    ZipNNSession,
+    resolve_options as _resolve_options,
+)
 
 __all__ = [
     "ZipNNConfig",
+    "CodecOptions",
+    "ZipNNSession",
     "CompressedTensor",
     "compress_array",
     "decompress_array",
@@ -254,11 +269,18 @@ def compress_bytes(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> bytes:
     """Compress a raw little-endian byte stream interpreted as ``dtype_name``."""
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     buf = np.frombuffer(raw, dtype=np.uint8) if isinstance(raw, (bytes, memoryview, bytearray)) else np.ascontiguousarray(raw, dtype=np.uint8)
     layout = bitlayout.layout_for(dtype_name)
-    tail = buf.size % layout.itemsize
+    tail = buf.size % layout.align
     body, rem = (buf[: buf.size - tail], buf[buf.size - tail :]) if tail else (buf, None)
     pool = engine.get_pool(config.threads if threads is None else threads)
     params = config.plane_params(layout.itemsize, delta)
@@ -397,8 +419,15 @@ def decompress_bytes(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> bytes:
     """Decompress one ZNN1 blob back to its raw little-endian byte stream."""
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     pool = engine.get_pool(config.threads if threads is None else threads)
     layout, planes, tail = _entropy_decode(
         blob, config, pool, entropy_backend=entropy_backend, backend=backend
@@ -449,7 +478,14 @@ def compress_array(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> CompressedTensor:
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     layout = _leaf_layout(arr)
     if layout is not None and np.size(arr):
         params = config.plane_params(layout.itemsize)
@@ -479,7 +515,9 @@ def compress_array(
     a = _to_numpy(arr)
     blob = compress_bytes(
         a.reshape(-1).view(np.uint8), a.dtype.name, config,
-        threads=threads, backend=backend, entropy_backend=entropy_backend,
+        options=CodecOptions(
+            threads=threads, backend=backend, entropy_backend=entropy_backend
+        ),
     )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
@@ -540,24 +578,33 @@ def decompress_array(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
-    device_resident: bool = False,
+    device_resident: Optional[bool] = None,
+    options: Optional[CodecOptions] = None,
 ) -> Any:
     """Decompress one leaf back to its dtype/shape.
 
-    Returns numpy by default.  ``device_resident=True`` keeps the restored
-    leaf on device as a ``jax.Array`` when the decode backend resolves to
-    device (see :func:`_decompress_array_device`) — bits identical, zero
-    device→host bounce; host-resolved leaves still come back as numpy.
+    Returns numpy by default.  ``device_resident=True`` (kwarg or options
+    field) keeps the restored leaf on device as a ``jax.Array`` when the
+    decode backend resolves to device (see :func:`_decompress_array_device`)
+    — bits identical, zero device→host bounce; host-resolved leaves still
+    come back as numpy.
     """
-    if device_resident:
+    opts = _resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend, device_resident=device_resident,
+    )
+    if opts.device_resident:
         out = _decompress_array_device(
-            ct, config, threads, backend, entropy_backend
+            ct, config, opts.threads, opts.backend, opts.entropy_backend
         )
         if out is not None:
             return out
     raw = decompress_bytes(
-        ct.blob, config, threads=threads, backend=backend,
-        entropy_backend=entropy_backend,
+        ct.blob, config,
+        options=CodecOptions(
+            threads=opts.threads, backend=opts.backend,
+            entropy_backend=opts.entropy_backend,
+        ),
     )
     return np.frombuffer(raw, dtype=_np_dtype(ct.dtype)).reshape(ct.shape).copy()
 
@@ -569,6 +616,7 @@ def compress_pytree(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> Dict[str, Any]:
     """Compress every leaf of a pytree. Returns a manifest dict.
 
@@ -583,6 +631,12 @@ def compress_pytree(
     """
     import jax
 
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     comp: List[Optional[CompressedTensor]] = [None] * len(leaves)
 
@@ -621,11 +675,13 @@ def compress_pytree(
         if comp[i] is None:
             # The plane path is host for these leaves, but a 'device'/'auto'
             # request still covers their entropy stage (mixed mode).
-            # zipnn: allow(knob-redefault): leaves the device window skipped are host-planed by design; mixed mode keeps the requested entropy backend
             comp[i] = compress_array(
-                leaf, config, threads=threads, backend="host",
-                entropy_backend=(
-                    entropy_backend if entropy_backend is not None else backend
+                leaf, config,
+                options=CodecOptions(
+                    threads=threads, backend="host",
+                    entropy_backend=(
+                        entropy_backend if entropy_backend is not None else backend
+                    ),
                 ),
             )
     return {
@@ -643,7 +699,8 @@ def decompress_pytree(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
-    device_resident: bool = False,
+    device_resident: Optional[bool] = None,
+    options: Optional[CodecOptions] = None,
 ) -> Any:
     """Decompress every leaf of a :func:`compress_pytree` manifest.
 
@@ -666,6 +723,13 @@ def decompress_pytree(
     import jax
     import jax.numpy as jnp
 
+    opts = _resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend, device_resident=device_resident,
+    )
+    threads, backend, entropy_backend, device_resident = (
+        opts.threads, opts.backend, opts.entropy_backend, opts.device_resident,
+    )
     cts: List[CompressedTensor] = manifest["leaves"]
     arrays: List[Optional[Any]] = [None] * len(cts)
 
@@ -739,13 +803,15 @@ def decompress_pytree(
         if arrays[i] is None:
             # Leaves the device batch skipped decode host-planed, but a
             # 'device'/'auto' request still covers their entropy stage.
-            # zipnn: allow(knob-redefault): leaves the device batch skipped decode on the host plane path by design (blobs are byte-identical either way); mixed mode keeps the requested entropy backend
             arrays[i] = decompress_array(
-                ct, config, threads=threads, backend="host",
-                entropy_backend=(
-                    entropy_backend if entropy_backend is not None else backend
+                ct, config,
+                options=CodecOptions(
+                    threads=threads, backend="host",
+                    entropy_backend=(
+                        entropy_backend if entropy_backend is not None else backend
+                    ),
+                    device_resident=device_resident,
                 ),
-                device_resident=device_resident,
             )
     return jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
 
@@ -762,6 +828,7 @@ def delta_compress(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> CompressedTensor:
     """XOR-delta two same-shape tensors and compress the delta stream.
 
@@ -774,6 +841,12 @@ def delta_compress(
     dispatch (rotation is a bit permutation, so it commutes with XOR): the
     delta never materializes host-side, only its planes do.
     """
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     if np.shape(new) != np.shape(base) or getattr(new, "dtype", None) != getattr(
         base, "dtype", None
     ):
@@ -807,8 +880,10 @@ def delta_compress(
         raise ValueError("delta requires matching shape/dtype")
     x = np.bitwise_xor(a.reshape(-1).view(np.uint8), b.reshape(-1).view(np.uint8))
     blob = compress_bytes(
-        x, a.dtype.name, config, delta=True, threads=threads, backend=backend,
-        entropy_backend=entropy_backend,
+        x, a.dtype.name, config, delta=True,
+        options=CodecOptions(
+            threads=threads, backend=backend, entropy_backend=entropy_backend
+        ),
     )
     return CompressedTensor(blob, a.dtype.name, tuple(a.shape))
 
@@ -821,6 +896,7 @@ def delta_compress_batched(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
+    options: Optional[CodecOptions] = None,
 ) -> List[CompressedTensor]:
     """Delta-compress many ``(new, base)`` pairs; returns blobs in order.
 
@@ -832,6 +908,12 @@ def delta_compress_batched(
     pair are identical to calling :func:`delta_compress` one pair at a time
     on either backend.
     """
+    opts = _resolve_options(
+        options, threads=threads, backend=backend, entropy_backend=entropy_backend
+    )
+    threads, backend, entropy_backend = (
+        opts.threads, opts.backend, opts.entropy_backend,
+    )
     if len(news) != len(bases):
         raise ValueError("news and bases must pair 1:1")
     out: List[Optional[CompressedTensor]] = [None] * len(news)
@@ -874,11 +956,15 @@ def delta_compress_batched(
 
     for i, (a, b) in enumerate(zip(news, bases)):
         if out[i] is None:
-            # zipnn: allow(knob-redefault): pairs the device batch skipped take the host delta path by design; entropy backend still follows the request
+            # Pairs the device batch skipped take the host delta path; the
+            # entropy stage still follows the request (mixed mode).
             out[i] = delta_compress(
-                a, b, config, threads=threads, backend="host",
-                entropy_backend=(
-                    entropy_backend if entropy_backend is not None else backend
+                a, b, config,
+                options=CodecOptions(
+                    threads=threads, backend="host",
+                    entropy_backend=(
+                        entropy_backend if entropy_backend is not None else backend
+                    ),
                 ),
             )
     return out
@@ -892,7 +978,8 @@ def delta_decompress(
     threads: Optional[int] = None,
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
-    device_resident: bool = False,
+    device_resident: Optional[bool] = None,
+    options: Optional[CodecOptions] = None,
 ) -> Any:
     """Invert :func:`delta_compress`: decode the delta stream and XOR it
     with ``base``.
@@ -908,6 +995,13 @@ def delta_decompress(
     bounce) when the decode backend resolves to device; host-resolved
     decodes still return numpy.
     """
+    opts = _resolve_options(
+        options, threads=threads, backend=backend,
+        entropy_backend=entropy_backend, device_resident=device_resident,
+    )
+    threads, backend, entropy_backend, device_resident = (
+        opts.threads, opts.backend, opts.entropy_backend, opts.device_resident,
+    )
     base_dtype = getattr(getattr(base, "dtype", None), "name", None)
     if tuple(ct.shape) != tuple(np.shape(base)) or ct.dtype != base_dtype:
         # Same clean contract as delta_compress: a mismatched base would
@@ -951,11 +1045,15 @@ def delta_decompress(
             )
     b = _to_numpy(base)
     x = np.frombuffer(
-        # zipnn: allow(knob-redefault): delta XOR happens host-side here, so the plane decode is pinned to host; device delta decode goes through decompress_pytree. The entropy stage still follows the request.
+        # The delta XOR happens host-side here, so the plane decode is
+        # pinned to host; the entropy stage still follows the request.
         decompress_bytes(
-            ct.blob, config, threads=threads, backend="host",
-            entropy_backend=(
-                entropy_backend if entropy_backend is not None else backend
+            ct.blob, config,
+            options=CodecOptions(
+                threads=threads, backend="host",
+                entropy_backend=(
+                    entropy_backend if entropy_backend is not None else backend
+                ),
             ),
         ),
         dtype=np.uint8,

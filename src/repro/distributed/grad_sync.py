@@ -22,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.core import zipnn
+from repro.core.options import resolve_options
 
 PyTree = Any
 
@@ -40,28 +41,37 @@ class WireStats:
 class GradSync:
     """Engine-aware gradient packer.
 
-    ``threads`` fans the codec's (plane, chunk) work items across the
-    engine's shared pool; ``backend`` selects the plane-producer path
-    ('host' | 'device' | 'auto' — see ``core/device_plane.py``) and, with
-    the canonical 'huffman' coder, the fused device Huffman bit-pack stage
-    (``core/device_entropy.py``); ``entropy_backend`` overrides just that
-    stage (mixed mode).  Gradient payloads reuse the exact same codec work
-    items as checkpoints, so the knobs apply unchanged and wire bytes are
-    identical for every setting.
+    Codec knobs arrive as one ``CodecOptions`` bag (``options=``, see
+    ``core/options.py``): ``threads`` fans the codec's (plane, chunk) work
+    items across the engine's shared pool; ``backend`` selects the
+    plane-producer path ('host' | 'device' | 'auto' — see
+    ``core/device_plane.py``) and, with the canonical 'huffman' coder, the
+    fused device Huffman bit-pack stage (``core/device_entropy.py``);
+    ``entropy_backend`` overrides just that stage (mixed mode).  The loose
+    legacy kwargs still work (DeprecationWarning; explicit kwarg wins over
+    the bag).  Gradient payloads reuse the exact same codec work items as
+    checkpoints, so the knobs apply unchanged and wire bytes are identical
+    for every setting.
     """
 
     def __init__(
         self,
         config: zipnn.ZipNNConfig = zipnn.DEFAULT,
         *,
+        options: zipnn.CodecOptions | None = None,
         threads: int | None = None,
         backend: str | None = None,
         entropy_backend: str | None = None,
     ):
+        opts = resolve_options(
+            options, threads=threads, backend=backend,
+            entropy_backend=entropy_backend, _stacklevel=3,
+        )
         self.config = config
-        self.threads = threads
-        self.backend = backend
-        self.entropy_backend = entropy_backend
+        self.options = opts
+        self.threads = opts.threads
+        self.backend = opts.backend
+        self.entropy_backend = opts.entropy_backend
 
     def pack(self, grads: PyTree) -> Tuple[Dict[str, Any], WireStats]:
         import time
@@ -73,10 +83,7 @@ class GradSync:
         # device (batched multi-leaf dispatch) and only planed bytes cross.
         be = self.backend if self.backend is not None else self.config.plane_backend
         tree = jax.device_get(grads) if be == "host" else grads
-        manifest = zipnn.compress_pytree(
-            tree, self.config, threads=self.threads, backend=self.backend,
-            entropy_backend=self.entropy_backend,
-        )
+        manifest = zipnn.compress_pytree(tree, self.config, options=self.options)
         dt = time.perf_counter() - t0
         return manifest, WireStats(manifest["raw_bytes"], manifest["comp_bytes"], dt)
 
@@ -87,10 +94,7 @@ class GradSync:
         # and un-group + inverse rotate run as fused dispatches
         # (core/device_unplane.py), batched across same-layout leaves —
         # bytes identical to the host path.
-        return zipnn.decompress_pytree(
-            manifest, self.config, threads=self.threads, backend=self.backend,
-            entropy_backend=self.entropy_backend,
-        )
+        return zipnn.decompress_pytree(manifest, self.config, options=self.options)
 
     def exchange(
         self, grads: PyTree, n_peers: int, link_gbps: float = 1.0

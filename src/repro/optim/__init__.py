@@ -1,3 +1,17 @@
-from .adamw import AdamWConfig, init_opt_state, apply_updates, lr_schedule
+from .adamw import (
+    AdamWConfig,
+    MOMENT_KEYS,
+    init_opt_state,
+    is_moment_path,
+    apply_updates,
+    lr_schedule,
+)
 
-__all__ = ["AdamWConfig", "init_opt_state", "apply_updates", "lr_schedule"]
+__all__ = [
+    "AdamWConfig",
+    "MOMENT_KEYS",
+    "init_opt_state",
+    "is_moment_path",
+    "apply_updates",
+    "lr_schedule",
+]

@@ -18,6 +18,28 @@ import jax.numpy as jnp
 
 PyTree = Any
 
+# Top-level keys of :func:`init_opt_state`'s tree.  The checkpoint manager
+# keys off these to store AdamW moments as XOR deltas against the *previous
+# save* (not the periodic base): moments are EMAs, so step-over-step deltas
+# are far sparser than weight deltas — the paper's Fig. 7 optimizer-state
+# story applied to the save path.  Restoring replays the (bounded,
+# ≤ base_every) chain bit-exactly.
+MOMENT_KEYS: Tuple[str, ...] = ("m", "v")
+
+
+def is_moment_path(key: str, moment_keys: Tuple[str, ...] = MOMENT_KEYS) -> bool:
+    """True when a flat checkpoint key addresses an optimizer moment.
+
+    Matches ``m/...`` / ``v/...`` (an opt state saved alone) and
+    ``<anything>/m/...`` one level down (the train-state layout
+    ``opt/m/...``) — a *parameter* named ``m`` deeper in the tree never
+    matches.
+    """
+    parts = key.split("/")
+    return bool(parts) and (
+        parts[0] in moment_keys or (len(parts) > 1 and parts[1] in moment_keys)
+    )
+
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:

@@ -1,15 +1,19 @@
 from .compressed import CompressedParamStore
+from .kvcache import KVCacheStore
 from .step import (
     decode_state_specs,
     make_compressed_serve_step,
+    make_kv_tiered_serve_step,
     make_prefill,
     make_serve_step,
 )
 
 __all__ = [
     "CompressedParamStore",
+    "KVCacheStore",
     "decode_state_specs",
     "make_compressed_serve_step",
+    "make_kv_tiered_serve_step",
     "make_prefill",
     "make_serve_step",
 ]

@@ -26,9 +26,12 @@ decode/release; the store only does bookkeeping: ``resident_count`` /
 ``peak_resident`` count decoded-layer slots alive right now / ever, which
 is what the "at most ``ring`` decoded layers" claim asserts against.
 
-Knobs (``threads`` / ``backend`` / ``entropy_backend``) are instance-
-carried — the store forwards them on every compress/decompress edge, and
-``analysis/knobs.py`` pins the constructor surface.
+Codec knobs arrive as one ``CodecOptions`` bag (``options=``, see
+``core/options.py``) and are instance-carried — the store forwards the
+bag on every compress/decompress edge, and ``analysis/knobs.py`` pins the
+constructor surface.  The loose legacy kwargs (``threads`` / ``backend``
+/ ``entropy_backend``) still work with a DeprecationWarning; an explicit
+kwarg wins over the bag.
 """
 
 from __future__ import annotations
@@ -39,6 +42,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 import numpy as np
 
 from repro.core import zipnn
+from repro.core.options import resolve_options
 
 PyTree = Any
 
@@ -59,14 +63,20 @@ class CompressedParamStore:
         self,
         config: Optional[zipnn.ZipNNConfig] = None,
         *,
+        options: Optional[zipnn.CodecOptions] = None,
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
     ) -> None:
+        opts = resolve_options(
+            options, threads=threads, backend=backend,
+            entropy_backend=entropy_backend, _stacklevel=3,
+        )
         self._config = zipnn.DEFAULT if config is None else config
-        self._threads = threads
-        self._backend = backend
-        self._entropy_backend = entropy_backend
+        self._options = opts
+        self._threads = opts.threads
+        self._backend = opts.backend
+        self._entropy_backend = opts.entropy_backend
         self.static: Dict[str, PyTree] = {}
         self._stacks: Dict[str, List[Dict[str, Any]]] = {}
         self._lock = threading.Lock()
@@ -82,6 +92,7 @@ class CompressedParamStore:
         config: Optional[zipnn.ZipNNConfig] = None,
         *,
         stack_keys: Optional[Tuple[str, ...]] = None,
+        options: Optional[zipnn.CodecOptions] = None,
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
@@ -103,9 +114,10 @@ class CompressedParamStore:
             )
         store = cls(
             config,
-            threads=threads,
-            backend=backend,
-            entropy_backend=entropy_backend,
+            options=resolve_options(
+                options, threads=threads, backend=backend,
+                entropy_backend=entropy_backend, _stacklevel=3,
+            ),
         )
         keys = DEFAULT_STACK_KEYS if stack_keys is None else stack_keys
         for key, sub in params.items():
@@ -120,9 +132,7 @@ class CompressedParamStore:
                 zipnn.compress_pytree(
                     jax.tree_util.tree_map(lambda a: a[i], sub),
                     store._config,
-                    threads=store._threads,
-                    backend=store._backend,
-                    entropy_backend=store._entropy_backend,
+                    options=store._options,
                 )
                 for i in range(n)
             ]
@@ -142,10 +152,7 @@ class CompressedParamStore:
         tree = zipnn.decompress_pytree(
             manifest,
             self._config,
-            threads=self._threads,
-            backend=self._backend,
-            entropy_backend=self._entropy_backend,
-            device_resident=True,
+            options=self._options.replace(device_resident=True),
         )
         with self._lock:
             self._resident.add((key, i))

@@ -1,0 +1,258 @@
+"""KV-cache tiering: cold cache blocks live as ZNN1 payloads in HBM.
+
+Long-context decode is cache-bound: a (L, B, Lc, G, hd) bf16 KV cache is
+GiBs per layer stack, yet each step's attention touches every position
+while only the most recent ones were produced recently.  Cache entries are
+activations-at-rest — exactly the exponent-skewed bf16 payloads the paper's
+byte-grouping pipeline compresses well — so the cold majority of the cache
+can live compressed and decode on re-attention, the serving-side analogue
+of the compressed-at-rest weight store (``serve/compressed.py``).
+
+``KVCacheStore`` tiers a model's stacked attention caches (GQA ``kv_k`` /
+``kv_v`` and MLA ``mla_ckv`` / ``mla_kr``) by position:
+
+* the newest ``hot_window`` positions stay in a small uncompressed **hot
+  buffer** (a stacked suffix, one per cache key);
+* once a ``block_len``-aligned block falls entirely behind the hot window
+  it is **evicted**: each (key, layer) block compresses to its own ZNN1
+  payload (``zipnn.compress_array``), so re-attention for layer *j*
+  decodes only layer *j*'s blocks;
+* :meth:`layer_caches` reassembles one layer's full-length caches —
+  decoded cold blocks + live hot suffix + zero tail — bit-identical to the
+  array the untiered ``decode_step`` would have passed to the block
+  function (the codec is lossless and unwritten positions are zeros by
+  construction, matching ``init_kv_cache``/``init_mla_cache``).
+
+Bit-identity contract: a greedy decode through a tiered step produces
+logits (and therefore tokens) byte-identical to ``model.decode_step``,
+because every block function receives byte-identical inputs.  Residency
+contract: live hot positions never exceed ``hot_window + block_len`` (the
+partially-filled block awaiting eviction), and decoded cold blocks are in
+flight only for the single layer currently attending —
+``peak_hot_positions`` / ``peak_inflight_blocks`` assert both.
+
+There is no ring wraparound: tiering assumes ``pos < cache length`` (a
+wrapped slot would overwrite positions already evicted).  SSM / hybrid
+states have no cache-length axis and are rejected.
+
+Codec knobs arrive as one ``CodecOptions`` bag (``options=`` — this is a
+new surface, so there are no legacy loose kwargs to shim).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import zipnn
+from repro.core.options import CodecOptions, DEFAULT_OPTIONS
+
+Array = Any
+
+# Stacked attention-cache keys across the model zoo, in block-call order:
+# (c0, c1) = (kv_k, kv_v) for GQA, (mla_ckv, mla_kr) for MLA.
+GQA_KEYS: Tuple[str, str] = ("kv_k", "kv_v")
+MLA_KEYS: Tuple[str, str] = ("mla_ckv", "mla_kr")
+
+
+class KVCacheStore:
+    """Block-granular compressed tier over stacked attention caches."""
+
+    def __init__(
+        self,
+        state: Dict[str, Any],
+        *,
+        hot_window: int = 256,
+        block_len: int = 64,
+        config: Optional[zipnn.ZipNNConfig] = None,
+        options: Optional[CodecOptions] = None,
+    ) -> None:
+        if block_len < 1:
+            raise ValueError(f"block_len must be >= 1, got {block_len}")
+        if hot_window < 1:
+            raise ValueError(f"hot_window must be >= 1, got {hot_window}")
+        if "ssm_state" in state:
+            raise NotImplementedError(
+                "ssm/hybrid decode state has no cache-length axis to tier"
+            )
+        if all(k in state for k in MLA_KEYS):
+            keys = MLA_KEYS
+        elif all(k in state for k in GQA_KEYS):
+            keys = GQA_KEYS
+        else:
+            raise ValueError(
+                "state holds no stacked attention caches "
+                f"(need {GQA_KEYS} or {MLA_KEYS})"
+            )
+        if int(state["pos"]) != 0:
+            raise ValueError(
+                "tiering starts from an empty cache: build the state with "
+                "start_pos=0 and feed the prompt through the tiered step"
+            )
+        self._config = zipnn.DEFAULT if config is None else config
+        self._options = DEFAULT_OPTIONS if options is None else options
+        self.keys = keys
+        self.hot_window = hot_window
+        self.block_len = block_len
+        ref = state[keys[0]]
+        self.n_layers = int(ref.shape[0])
+        self.length = int(ref.shape[2])
+        # Hot capacity: hot_window live positions plus one block still
+        # filling — the moment a full block ages past the window it leaves.
+        cap = min(hot_window + block_len, self.length)
+        self.hot: Dict[str, Array] = {
+            k: jnp.zeros(
+                state[k].shape[:2] + (cap,) + state[k].shape[3:],
+                state[k].dtype,
+            )
+            for k in keys
+        }
+        # cold[key][layer] = ZNN1 payloads, one per evicted block, in
+        # position order: block b covers [b*block_len, (b+1)*block_len).
+        self._cold: Dict[str, List[List[zipnn.CompressedTensor]]] = {
+            k: [[] for _ in range(self.n_layers)] for k in keys
+        }
+        self.pos = 0
+        self.cold_len = 0
+        self.peak_hot_positions = 0
+        self.peak_inflight_blocks = 0
+
+    # -- read path ---------------------------------------------------------
+
+    def layer_caches(self, layer: int) -> Tuple[Array, ...]:
+        """Layer ``layer``'s full-length caches, ``(c0, c1)``-ordered.
+
+        Byte-identical to the slices ``decode_step`` would read from the
+        untiered stacked cache: decoded cold blocks (lossless), then the
+        live hot suffix, then the zero tail.  Decoded blocks are in flight
+        only for the duration of this layer's reassembly — the in-flight
+        residency term.
+        """
+        return tuple(self._assemble(k, layer) for k in self.keys)
+
+    def _assemble(self, key: str, layer: int) -> Array:
+        hot = self.hot[key][layer]                      # (B, cap, ...)
+        blocks = self._cold[key][layer]
+        if blocks:
+            self.peak_inflight_blocks = max(
+                self.peak_inflight_blocks, len(blocks)
+            )
+        parts = [
+            jnp.asarray(
+                zipnn.decompress_array(
+                    ct, self._config,
+                    options=self._options.replace(device_resident=True),
+                )
+            )
+            for ct in blocks
+        ]
+        take = min(hot.shape[1], self.length - self.cold_len)
+        parts.append(hot[:, :take])
+        pad = self.length - self.cold_len - take
+        if pad:
+            parts.append(
+                jnp.zeros(hot.shape[:1] + (pad,) + hot.shape[2:], hot.dtype)
+            )
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+    # -- write path --------------------------------------------------------
+
+    def append(self, *news: Array) -> None:
+        """Write one decoded token's stacked new-cache entries.
+
+        ``news`` aligns with :attr:`keys` — each ``(L, B, 1, ...)``, the
+        stacked per-layer returns of the block functions, exactly what
+        ``decode_step`` hands to its single post-loop slot write.  The
+        write is the same masked one-hot select (at the hot-local slot),
+        then blocks aged fully past the hot window evict.
+        """
+        if self.pos >= self.length:
+            raise ValueError(
+                f"tiered cache is full at pos={self.pos} (length "
+                f"{self.length}): no ring wraparound over evicted blocks"
+            )
+        slot = self.pos - self.cold_len
+        for k, new in zip(self.keys, news):
+            hot = self.hot[k]
+            idx = jax.lax.broadcasted_iota(jnp.int32, hot.shape, 2)
+            self.hot[k] = jnp.where(idx == slot, new.astype(hot.dtype), hot)
+        self.pos += 1
+        self.peak_hot_positions = max(
+            self.peak_hot_positions, self.pos - self.cold_len
+        )
+        while self.pos - self.cold_len >= self.hot_window + self.block_len:
+            self._evict_block()
+
+    def _evict_block(self) -> None:
+        bl = self.block_len
+        for k in self.keys:
+            hot = self.hot[k]
+            block = np.asarray(hot[:, :, :bl])          # (L, B, bl, ...)
+            for j in range(self.n_layers):
+                self._cold[k][j].append(
+                    zipnn.compress_array(
+                        np.ascontiguousarray(block[j]),
+                        self._config, options=self._options,
+                    )
+                )
+            zero = jnp.zeros(hot.shape[:2] + (bl,) + hot.shape[3:], hot.dtype)
+            self.hot[k] = jnp.concatenate([hot[:, :, bl:], zero], axis=2)
+        self.cold_len += bl
+
+    # -- residency accounting ---------------------------------------------
+
+    @property
+    def n_cold_blocks(self) -> int:
+        """Evicted blocks per (key, layer) — all chains have equal length."""
+        return self.cold_len // self.block_len
+
+    @property
+    def hot_bytes(self) -> int:
+        """Uncompressed bytes held resident in the hot buffers."""
+        return sum(
+            int(np.prod(h.shape)) * h.dtype.itemsize for h in self.hot.values()
+        )
+
+    @property
+    def cold_comp_bytes(self) -> int:
+        """ZNN1 payload bytes held at rest for evicted blocks."""
+        return sum(
+            len(ct.blob)
+            for per_layer in self._cold.values()
+            for chain in per_layer
+            for ct in chain
+        )
+
+    @property
+    def cold_raw_bytes(self) -> int:
+        """What the evicted blocks would occupy uncompressed."""
+        from repro.core import bitlayout
+
+        return sum(
+            int(np.prod(ct.shape)) * bitlayout.layout_for(ct.dtype).itemsize
+            for per_layer in self._cold.values()
+            for chain in per_layer
+            for ct in chain
+        )
+
+    @property
+    def full_cache_bytes(self) -> int:
+        """The untiered stacked caches' footprint (the baseline)."""
+        per_pos = sum(
+            int(np.prod(h.shape[:2]) * np.prod(h.shape[3:])) * h.dtype.itemsize
+            for h in self.hot.values()
+        )
+        return per_pos * self.length
+
+    def resident_bytes(self, inflight_layers: int = 1) -> int:
+        """Tiered steady-state footprint: hot buffers + compressed cold
+        payloads + ``inflight_layers`` reassembled full-length layers."""
+        per_layer = self.full_cache_bytes // max(self.n_layers, 1)
+        return (
+            self.hot_bytes
+            + self.cold_comp_bytes
+            + inflight_layers * per_layer
+        )

@@ -113,12 +113,137 @@ def make_serve_step(model: Model) -> Callable:
     return serve_step
 
 
+# ---------------------------------------------------------------------------
+# shared decode-step scaffolding (compressed ring + KV-tiered steps)
+#
+# The per-layer loop steps below reproduce decode_step outside the scan: the
+# same block functions, the same eager front (embed + learned positions) and
+# tail (final norm + unembed), the same single post-loop cache write.  These
+# helpers are that shared skeleton — one source of truth for the layer plan
+# and the bit-identity claim.
+# ---------------------------------------------------------------------------
+
+
+def _layer_plan(cfg) -> list:
+    """[(stack_key, layer_index, block_kind)] in decode order."""
+    if cfg.family == "moe":
+        fk = cfg.first_k_dense
+        return [("dense_layers", i, "dense") for i in range(fk)] + [
+            ("moe_layers", i, "moe") for i in range(cfg.n_layers - fk)
+        ]
+    return [
+        ("layers", i, "ssm" if cfg.family == "ssm" else "dense")
+        for i in range(cfg.n_layers)
+    ]
+
+
+def _block_kinds(cfg) -> Dict[str, Callable]:
+    """One compile per block *kind*, shared by every layer (all layers of a
+    stack have identical shapes) — the same block functions decode_step's
+    scan body runs, so the math is bit-identical to the fused step."""
+    from repro.models import blocks
+
+    return {
+        "dense": jax.jit(
+            lambda lp, h, c0, c1, pos: blocks.dense_block_decode(
+                lp, h, (c0, c1), pos, cfg
+            )
+        ),
+        "moe": jax.jit(
+            lambda lp, h, c0, c1, pos: blocks.moe_block_decode(
+                lp, h, (c0, c1), pos, cfg
+            )
+        ),
+        "ssm": jax.jit(
+            lambda lp, h, st, cv, pos: blocks.mamba_block_decode(
+                lp, h, (st, cv), pos, cfg
+            )
+        ),
+    }
+
+
+def _decode_front(cfg, sp, tokens, pos):
+    """Embed + learned positions, mirroring decode_step line for line (kept
+    eager: a token-sized gather — bitwise the same ops)."""
+    import jax.numpy as jnp
+
+    from repro.models import layers
+    from repro.distributed.sharding import lshard
+
+    x = layers.embed(sp["embed"], tokens)
+    if cfg.pos_embedding == "learned":
+        pe = jax.lax.dynamic_slice_in_dim(
+            sp["pos"]["table"], jnp.minimum(pos, cfg.max_position - 1), 1
+        )
+        x = x + pe[None].astype(x.dtype)
+    return lshard(x, "batch", None, None)
+
+
+def _decode_tail(cfg, sp, x):
+    from repro.models import blocks, layers
+
+    x = blocks.norm_apply(cfg, sp["final_norm"], x)
+    head = sp["embed"] if cfg.tie_embeddings else sp["lm_head"]
+    return layers.unembed(head, x)
+
+
+def make_kv_tiered_serve_step(model: Model, params, kv_store) -> Callable:
+    """Decode step over a :class:`repro.serve.kvcache.KVCacheStore`.
+
+    ``serve_step(tokens) -> logits`` — the cache lives in ``kv_store``
+    (hot suffix + compressed cold blocks) instead of the state dict, and
+    advances as a side effect of the call.  Logits are **bit-identical**
+    to ``model.decode_step`` over the untiered cache: each layer's block
+    function receives the store's reassembled full-length caches
+    (byte-identical arrays — see ``serve/kvcache.py``), and the new-token
+    entries flow through the same masked one-hot write.  Peak cache
+    residency drops to hot buffers + compressed payloads + one layer's
+    reassembly in flight.
+
+    ssm / hybrid models have no cache-length axis and are rejected.
+    """
+    import jax.numpy as jnp
+
+    cfg = model.cfg
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            f"{cfg.name}: family {cfg.family!r} has no attention-cache "
+            "length axis to tier"
+        )
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name}: family {cfg.family!r} has no decode path")
+    if kv_store.n_layers != cfg.n_layers:
+        raise ValueError(
+            f"kv_store holds {kv_store.n_layers} layers, "
+            f"model {cfg.name} has {cfg.n_layers}"
+        )
+    plan = _layer_plan(cfg)
+    kinds = _block_kinds(cfg)
+
+    def serve_step(tokens):
+        pos = jnp.asarray(kv_store.pos, jnp.int32)
+        x = _decode_front(cfg, params, tokens, pos)
+        outs0, outs1 = [], []
+        for j, (key, i, kind) in enumerate(plan):
+            lp = jax.tree_util.tree_map(lambda a, i=i: a[i], params[key])
+            c0j, c1j = kv_store.layer_caches(j)
+            x, (u0, u1) = kinds[kind](lp, x, c0j, c1j, pos)
+            outs0.append(u0)
+            outs1.append(u1)
+        kv_store.append(jnp.stack(outs0), jnp.stack(outs1))
+        return _decode_tail(cfg, params, x)
+
+    serve_step.kv_store = kv_store
+    return serve_step
+
+
 def make_compressed_serve_step(
     model: Model,
     store,
     *,
     ring: int = 2,
     prefetch: bool = True,
+    kv_store=None,
 ) -> Callable:
     """Compressed-resident decode step over a ``CompressedParamStore``.
 
@@ -143,13 +268,19 @@ def make_compressed_serve_step(
 
     hybrid (mamba-group) models are rejected: their shared attention
     params repeat across groups, which does not fit a per-layer ring.
+
+    ``kv_store`` (a :class:`repro.serve.kvcache.KVCacheStore`) composes
+    the KV-cache tier with the weight ring: the state dict then carries
+    only ``pos`` — caches live in the store as a hot suffix + compressed
+    cold blocks, each layer attends over its reassembled full-length
+    caches (bit-identical arrays), and the post-loop slot write becomes
+    ``kv_store.append``.  Everything compressible at serve time — weights
+    at rest AND cold cache — is then ZNN1 payloads.
     """
     import jax.numpy as jnp
     from concurrent.futures import ThreadPoolExecutor
 
-    from repro.models import blocks, layers
     from repro.models.model import _slot_write
-    from repro.distributed.sharding import lshard
 
     cfg = model.cfg
     if cfg.family == "hybrid":
@@ -161,15 +292,12 @@ def make_compressed_serve_step(
         raise ValueError(f"{cfg.name}: family {cfg.family!r} has no decode path")
     if ring < 1:
         raise ValueError(f"ring must be >= 1, got {ring}")
+    if kv_store is not None and cfg.family == "ssm":
+        raise NotImplementedError(
+            f"{cfg.name}: ssm state has no cache-length axis to tier"
+        )
 
-    if cfg.family == "moe":
-        fk = cfg.first_k_dense
-        plan = [("dense_layers", i, "dense") for i in range(fk)] + [
-            ("moe_layers", i, "moe") for i in range(cfg.n_layers - fk)
-        ]
-    else:
-        plan = [("layers", i, "ssm" if cfg.family == "ssm" else "dense")
-                for i in range(cfg.n_layers)]
+    plan = _layer_plan(cfg)
     for key in {k for k, _, _ in plan}:
         want = sum(1 for k, _, _ in plan if k == key)
         if store.n_layers(key) != want:
@@ -178,42 +306,7 @@ def make_compressed_serve_step(
                 f"model {cfg.name} needs {want}"
             )
 
-    # One compile per block *kind*, shared by every layer (all layers of a
-    # stack have identical shapes) — the same block functions decode_step's
-    # scan body runs, so the math is bit-identical to the fused step.
-    kinds = {
-        "dense": jax.jit(
-            lambda lp, h, c0, c1, pos: blocks.dense_block_decode(
-                lp, h, (c0, c1), pos, cfg
-            )
-        ),
-        "moe": jax.jit(
-            lambda lp, h, c0, c1, pos: blocks.moe_block_decode(
-                lp, h, (c0, c1), pos, cfg
-            )
-        ),
-        "ssm": jax.jit(
-            lambda lp, h, st, cv, pos: blocks.mamba_block_decode(
-                lp, h, (st, cv), pos, cfg
-            )
-        ),
-    }
-
-    # Front/tail mirror decode_step line for line (kept eager: they are a
-    # token-sized gather and one unembed matmul — bitwise the same ops).
-    def _front(sp, tokens, pos):
-        x = layers.embed(sp["embed"], tokens)
-        if cfg.pos_embedding == "learned":
-            pe = jax.lax.dynamic_slice_in_dim(
-                sp["pos"]["table"], jnp.minimum(pos, cfg.max_position - 1), 1
-            )
-            x = x + pe[None].astype(x.dtype)
-        return lshard(x, "batch", None, None)
-
-    def _tail(sp, x):
-        x = blocks.norm_apply(cfg, sp["final_norm"], x)
-        head = sp["embed"] if cfg.tie_embeddings else sp["lm_head"]
-        return layers.unembed(head, x)
+    kinds = _block_kinds(cfg)
 
     executor = (
         ThreadPoolExecutor(max_workers=1, thread_name_prefix="znn-ring")
@@ -228,7 +321,7 @@ def make_compressed_serve_step(
 
     def serve_step(state, tokens):
         pos = state["pos"]
-        x = _front(store.static, tokens, pos)
+        x = _decode_front(cfg, store.static, tokens, pos)
         new_state = dict(state)
 
         inflight: list = []
@@ -269,6 +362,18 @@ def make_compressed_serve_step(
                 outs_c.append(cv)
             new_state["ssm_state"] = jnp.stack(outs_s)
             new_state["ssm_conv"] = jnp.stack(outs_c)
+        elif kv_store is not None:
+            outs0, outs1 = [], []
+            for j, (key, i, kind) in enumerate(plan):
+                lp = layer_params(j)
+                c0j, c1j = kv_store.layer_caches(j)
+                x, (u0, u1) = kinds[kind](lp, x, c0j, c1j, pos)
+                store.release(key, i)
+                outs0.append(u0)
+                outs1.append(u1)
+            # single post-loop cache write, exactly as decode_step — into
+            # the tiered store's hot buffer instead of the state dict
+            kv_store.append(jnp.stack(outs0), jnp.stack(outs1))
         else:
             c0, c1 = (
                 (state["mla_ckv"], state["mla_kr"])
@@ -293,12 +398,13 @@ def make_compressed_serve_step(
                 new_state["kv_k"] = _slot_write(c0, n0, slot)
                 new_state["kv_v"] = _slot_write(c1, n1, slot)
 
-        logits = _tail(store.static, x)
+        logits = _decode_tail(cfg, store.static, x)
         new_state["pos"] = pos + 1
         return logits, new_state
 
     serve_step.store = store
     serve_step.ring = ring
+    serve_step.kv_store = kv_store
     return serve_step
 
 

@@ -228,6 +228,97 @@ def test_knob_surface_contract():
     assert surface, "missing entry points / knobs must be flagged"
 
 
+def test_knob_surface_requires_options_bag():
+    # the full legacy knob set without options= now fails the contract
+    code = """
+    def simulate_transfer(data, dtype_name, channel, threads=None,
+                          backend=None, entropy_backend=None):
+        return None
+
+    def simulate_file_transfer(path, dtype_name, channel, threads=None,
+                               backend=None, entropy_backend=None,
+                               options=None):
+        return None
+    """
+    v = lint(code, "src/repro/checkpoint/hub.py", [knobs])
+    surface = [x for x in v if x.rule == "knob-surface"]
+    assert len(surface) == 1
+    assert "simulate_transfer" in surface[0].message
+    assert "options" in surface[0].message
+
+
+def test_knob_options_bag_supersedes_legacy_edges():
+    # binding options= (non-None) satisfies the legacy knobs on that edge
+    code = """
+    def inner(data, threads=None, backend=None, options=None):
+        return data
+
+    def outer(data, threads=None, backend=None, options=None):
+        return inner(data, options=options)
+    """
+    assert not lint(code, KNOB_SCOPE, [knobs])
+
+
+def test_knob_options_none_does_not_supersede():
+    # an explicit options=None edge still checks the legacy knobs
+    code = """
+    def inner(data, threads=None, backend=None, options=None):
+        return data
+
+    def outer(data, threads=None, backend=None, options=None):
+        return inner(data, options=None)
+    """
+    v = lint(code, KNOB_SCOPE, [knobs])
+    assert {x.rule for x in v} == {"knob-dropped"}
+    # threads + backend dropped (options itself was explicitly bound)
+    assert sum(1 for x in v if x.rule == "knob-dropped") == 2
+
+
+def test_knob_options_dropped_is_flagged():
+    # the bag is a knob too: dropping it on an edge is caught
+    code = """
+    def inner(data, options=None):
+        return data
+
+    def outer(data, options=None):
+        return inner(data)
+    """
+    v = lint(code, KNOB_SCOPE, [knobs])
+    assert rules_of(v) == {"knob-dropped"}
+    assert "options" in v[0].message
+
+
+def test_knob_codec_options_constructor_exempt():
+    # building the bag from knob locals/constants is the forwarding act —
+    # CodecOptions(...) edges are never knob-checked
+    code = """
+    class CodecOptions:
+        def __init__(self, threads=None, backend=None, entropy_backend=None):
+            self.threads = threads
+
+    def outer(data, threads=None, backend=None, entropy_backend=None):
+        return CodecOptions(threads=threads, backend="host")
+    """
+    assert not lint(code, KNOB_SCOPE, [knobs])
+
+
+def test_knob_surface_round_trip_real_repo():
+    """Every SURFACE pin resolves against the real repo files: the declared
+    entry points exist and accept their full knob sets (incl. options=)."""
+    from repro.analysis.driver import find_repo_root, load_project
+
+    project = load_project(find_repo_root())
+    v = [x for x in knobs.check(project) if x.rule == "knob-surface"]
+    assert not v, [f"{x.path}:{x.lineno} {x.message}" for x in v]
+    # the pins themselves cover the redesigned surface
+    assert "options" in knobs.KNOBS
+    for rel in (
+        "src/repro/core/options.py",
+        "src/repro/serve/kvcache.py",
+    ):
+        assert rel in knobs.SURFACE
+
+
 # ---------------------------------------------------------------------------
 # container spec
 # ---------------------------------------------------------------------------

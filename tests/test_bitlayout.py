@@ -86,3 +86,68 @@ def test_rejects_misaligned():
         bitlayout.to_planes(np.zeros(7, dtype=np.uint8), layout)
     with pytest.raises(TypeError):
         bitlayout.to_planes(np.zeros(8, dtype=np.int16), layout)
+
+
+# --- fp8 sub-byte layouts + int8 -------------------------------------------
+
+FP8_DTYPES = ["float8_e4m3fn", "float8_e5m2"]
+
+
+@pytest.mark.parametrize("dtype_name", FP8_DTYPES + ["int8"])
+@pytest.mark.parametrize("n", [0, 2, 128, 4096, 65538])
+def test_fp8_int8_roundtrip(dtype_name, n):
+    layout = bitlayout.layout_for(dtype_name)
+    rng = np.random.default_rng(7 + n)
+    raw = rng.integers(0, 256, n * layout.itemsize, dtype=np.uint8)
+    planes = bitlayout.to_planes(raw, layout)
+    assert len(planes) == layout.n_planes
+    back = bitlayout.from_planes(planes, layout)
+    np.testing.assert_array_equal(back, raw)
+
+
+@pytest.mark.parametrize("dtype_name", FP8_DTYPES)
+def test_fp8_odd_buffer_rejected(dtype_name):
+    """Sub-byte layouts split element *pairs*: align is 2 even at itemsize 1
+    (an odd trailing element rides the container TAIL, not the planes)."""
+    layout = bitlayout.layout_for(dtype_name)
+    assert layout.align == 2 and layout.itemsize == 1
+    with pytest.raises(ValueError):
+        bitlayout.to_planes(np.zeros(7, dtype=np.uint8), layout)
+
+
+def test_e4m3_high_nibbles_are_exponents():
+    """Plane 0 of e4m3 packs the two elements' 4-bit exponents per byte."""
+    rng = np.random.default_rng(2)
+    w = (rng.standard_normal(10000) * 0.5).astype(ml_dtypes.float8_e4m3fn)
+    layout = bitlayout.layout_for("float8_e4m3fn")
+    planes = bitlayout.to_planes(np.ascontiguousarray(w).view(np.uint8), layout)
+    exps = bitlayout.exponent_view(w)
+    np.testing.assert_array_equal(planes[0] >> 4, exps[0::2])
+    np.testing.assert_array_equal(planes[0] & 0x0F, exps[1::2])
+
+
+def test_int8_single_plane_no_rotation():
+    layout = bitlayout.layout_for("int8")
+    assert layout.name == "i8" and not layout.rotate and layout.n_planes == 1
+    raw = np.arange(256, dtype=np.uint8)
+    (plane,) = bitlayout.to_planes(raw, layout)
+    np.testing.assert_array_equal(plane, raw)
+
+
+@pytest.mark.parametrize(
+    "dtype", [ml_dtypes.float8_e4m3fn, ml_dtypes.float8_e5m2, np.int8]
+)
+@pytest.mark.parametrize("n", [1, 7, 50_001])  # odd sizes: container TAIL
+def test_fp8_int8_codec_roundtrip(dtype, n):
+    """Full ZNN1 round-trip for the quantized layouts, odd lengths included."""
+    from repro.core import zipnn
+
+    rng = np.random.default_rng(3)
+    if np.dtype(dtype) == np.int8:
+        arr = rng.integers(-127, 128, n).astype(np.int8)
+    else:
+        arr = (rng.standard_normal(n) * 0.5).astype(dtype)
+    ct = zipnn.compress_array(arr)
+    back = zipnn.decompress_array(ct)
+    assert back.dtype == arr.dtype and back.shape == arr.shape
+    assert back.tobytes() == arr.tobytes()

@@ -1,0 +1,224 @@
+"""KV-cache tiering: cold blocks compressed at rest, decode bit-identical.
+
+The contract under test (docs/INVARIANTS.md): a greedy decode through
+``make_kv_tiered_serve_step`` over a ``KVCacheStore`` produces logits
+byte-identical to ``model.decode_step`` over the untiered cache — across
+GQA and MLA cache families — because every block function receives
+byte-identical reassembled caches.  Residency: live hot positions never
+exceed ``hot_window + block_len``, and eviction actually happens (cold
+chains grow) once positions age past the window.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import zipnn
+from repro.core.options import CodecOptions
+from repro.models import build_model
+from repro.serve import (
+    CompressedParamStore,
+    KVCacheStore,
+    make_compressed_serve_step,
+    make_kv_tiered_serve_step,
+)
+
+# Small windows so a short decode crosses several eviction boundaries.
+HOT, BLK = 3, 2
+
+
+def _tiny(name: str):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    return cfg, model, params
+
+
+def _lockstep_tiered(cfg, model, params, steps, **store_kw):
+    """Drive jit(decode_step) and the tiered step on the same tokens.
+
+    Returns the store; asserts logits byte-identical at every step AND the
+    reassembled per-layer caches byte-identical to the reference state."""
+    step = jax.jit(model.decode_step)
+    B = 2
+    state = model.init_decode_state(B, steps, start_pos=0)
+    store = KVCacheStore(
+        model.init_decode_state(B, steps, start_pos=0),
+        hot_window=HOT, block_len=BLK, **store_kw,
+    )
+    tstep = make_kv_tiered_serve_step(model, params, store)
+    rng = np.random.default_rng(0)
+    for s in range(steps):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+        la, state = step(params, state, toks)
+        lb = tstep(toks)
+        assert (
+            np.asarray(la).tobytes() == np.asarray(lb).tobytes()
+        ), f"logits diverged at step {s}"
+    # The tier must be invisible: every layer's reassembled caches match
+    # the untiered stacked cache bit for bit.
+    for j in range(store.n_layers):
+        ref = tuple(state[k][j] for k in store.keys)
+        got = store.layer_caches(j)
+        for r, g in zip(ref, got):
+            assert np.asarray(r).tobytes() == np.asarray(g).tobytes()
+    assert int(state["pos"]) == store.pos
+    return store
+
+
+class TestKVTieredBitIdentity:
+    @pytest.mark.parametrize(
+        "arch",
+        [
+            "repro_gpt_100m",      # dense, GQA kv_k/kv_v
+            "olmoe_1b_7b",         # moe
+            "deepseek_v2_236b",    # MLA latent caches (mla_ckv/mla_kr)
+        ],
+    )
+    def test_bit_identical_per_family(self, arch):
+        cfg, model, params = _tiny(arch)
+        steps = 12
+        store = _lockstep_tiered(cfg, model, params, steps)
+        assert store.n_cold_blocks > 0            # eviction actually ran
+        assert store.peak_hot_positions <= HOT + BLK
+        assert store.cold_comp_bytes > 0
+
+    def test_composes_with_weight_ring(self):
+        """KV tier + compressed weight ring: state carries only pos, both
+        weights and cold cache live as ZNN1 payloads — still bit-identical."""
+        cfg, model, params = _tiny("repro_gpt_100m")
+        steps = 10
+        step = jax.jit(model.decode_step)
+        B = 2
+        ref_state = model.init_decode_state(B, steps, start_pos=0)
+        kv_store = KVCacheStore(
+            model.init_decode_state(B, steps, start_pos=0),
+            hot_window=HOT, block_len=BLK,
+        )
+        wstore = CompressedParamStore.from_params(params)
+        cstep = make_compressed_serve_step(model, wstore, kv_store=kv_store)
+        state = {"pos": ref_state["pos"]}
+        rng = np.random.default_rng(1)
+        for _ in range(steps):
+            toks = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32
+            )
+            la, ref_state = step(params, ref_state, toks)
+            lb, state = cstep(state, toks)
+            assert np.asarray(la).tobytes() == np.asarray(lb).tobytes()
+        assert kv_store.n_cold_blocks > 0
+        assert wstore.comp_bytes < wstore.raw_bytes
+
+    def test_options_bag_changes_nothing(self):
+        """The store is bag-only (no legacy kwargs); knobs never change
+        cache bytes, so logits stay identical across options."""
+        cfg, model, params = _tiny("repro_gpt_100m")
+        a = _lockstep_tiered(cfg, model, params, 8)
+        b = _lockstep_tiered(
+            cfg, model, params, 8, options=CodecOptions(threads=2)
+        )
+        assert a.cold_comp_bytes == b.cold_comp_bytes
+
+
+class TestKVCacheStoreMechanics:
+    def _state(self, length=10):
+        model = build_model(get_config("repro_gpt_100m").reduced())
+        return model, model.init_decode_state(2, length, start_pos=0)
+
+    def test_residency_accounting(self):
+        model, state = self._state(length=12)
+        params = model.init(jax.random.key(0))
+        store = KVCacheStore(state, hot_window=HOT, block_len=BLK)
+        tstep = make_kv_tiered_serve_step(model, params, store)
+        rng = np.random.default_rng(2)
+        for _ in range(12):
+            toks = jnp.asarray(rng.integers(0, 100, (2, 1)), jnp.int32)
+            tstep(toks)
+        assert store.pos == 12
+        assert store.cold_len == store.n_cold_blocks * BLK
+        assert store.n_cold_blocks >= 3
+        assert store.hot_bytes > 0 and store.cold_comp_bytes > 0
+        assert store.cold_raw_bytes >= store.n_cold_blocks  # sane scale
+        # full-cache baseline matches the untiered stacked cache footprint
+        per_key = [
+            int(np.prod(state[k].shape)) * state[k].dtype.itemsize
+            for k in store.keys
+        ]
+        assert store.full_cache_bytes == sum(per_key)
+        assert store.resident_bytes(0) == (
+            store.hot_bytes + store.cold_comp_bytes
+        )
+
+    def test_rejects_ssm_state(self):
+        model = build_model(get_config("mamba2_130m").reduced())
+        state = model.init_decode_state(2, 8, start_pos=0)
+        with pytest.raises((NotImplementedError, ValueError)):
+            KVCacheStore(state, hot_window=HOT, block_len=BLK)
+
+    def test_rejects_nonempty_start(self):
+        model, state = self._state()
+        state = dict(state, pos=jnp.asarray(3, jnp.int32))
+        with pytest.raises(ValueError, match="start_pos=0"):
+            KVCacheStore(state, hot_window=HOT, block_len=BLK)
+
+    def test_rejects_bad_windows(self):
+        _, state = self._state()
+        with pytest.raises(ValueError):
+            KVCacheStore(state, hot_window=0, block_len=BLK)
+        with pytest.raises(ValueError):
+            KVCacheStore(state, hot_window=HOT, block_len=0)
+
+    def test_no_wraparound_past_length(self):
+        model, state = self._state(length=4)
+        params = model.init(jax.random.key(0))
+        store = KVCacheStore(state, hot_window=HOT, block_len=BLK)
+        tstep = make_kv_tiered_serve_step(model, params, store)
+        rng = np.random.default_rng(3)
+        for _ in range(4):
+            tstep(jnp.asarray(rng.integers(0, 100, (2, 1)), jnp.int32))
+        with pytest.raises(ValueError, match="full"):
+            tstep(jnp.asarray(rng.integers(0, 100, (2, 1)), jnp.int32))
+
+    def test_serve_step_rejects_ssm_kv_store(self):
+        model = build_model(get_config("mamba2_130m").reduced())
+        params = model.init(jax.random.key(0))
+        gpt = build_model(get_config("repro_gpt_100m").reduced())
+        kv = KVCacheStore(
+            gpt.init_decode_state(2, 8, start_pos=0),
+            hot_window=HOT, block_len=BLK,
+        )
+        with pytest.raises(NotImplementedError):
+            make_kv_tiered_serve_step(model, params, kv)
+        store = CompressedParamStore.from_params(params)
+        with pytest.raises(NotImplementedError):
+            make_compressed_serve_step(model, store, kv_store=kv)
+
+    def test_layer_count_mismatch_rejected(self):
+        gpt = build_model(get_config("repro_gpt_100m").reduced())
+        params = gpt.init(jax.random.key(0))
+        other = build_model(get_config("olmoe_1b_7b").reduced())
+        mism = KVCacheStore(
+            other.init_decode_state(2, 8, start_pos=0),
+            hot_window=HOT, block_len=BLK,
+        )
+        if mism.n_layers != gpt.cfg.n_layers:
+            with pytest.raises(ValueError, match="layers"):
+                make_kv_tiered_serve_step(gpt, params, mism)
+        else:
+            pytest.skip("reduced configs share a layer count")
+
+    def test_cold_blocks_individually_decodable(self):
+        """Each (key, layer, block) payload is its own ZNN1 container."""
+        model, state = self._state(length=12)
+        params = model.init(jax.random.key(0))
+        store = KVCacheStore(state, hot_window=HOT, block_len=BLK)
+        tstep = make_kv_tiered_serve_step(model, params, store)
+        rng = np.random.default_rng(4)
+        for _ in range(10):
+            tstep(jnp.asarray(rng.integers(0, 100, (2, 1)), jnp.int32))
+        k = store.keys[0]
+        ct = store._cold[k][0][0]
+        block = zipnn.decompress_array(ct)
+        assert block.shape[1] == BLK  # (B, block_len, ...) slab

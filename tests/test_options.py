@@ -1,0 +1,273 @@
+"""Unified codec-options API: the bag, the deprecation shim, the session.
+
+The api_redesign contract (docs/INVARIANTS.md): ``CodecOptions`` routes the
+same values the legacy ``threads=``/``backend=``/``entropy_backend=``
+kwargs did — bytes identical on every combination — with precedence
+
+    explicit legacy kwarg  >  options field  >  ZipNNConfig field
+
+and a DeprecationWarning on the legacy codec knobs only
+(``device_resident`` is a semantic flag, never deprecated).
+"""
+
+import contextlib
+import dataclasses
+import warnings
+
+import ml_dtypes
+import numpy as np
+import pytest
+
+from repro.core import zipnn
+from repro.core.options import (
+    CodecOptions,
+    DEFAULT_OPTIONS,
+    ZipNNSession,
+    resolve_options,
+)
+
+
+def _payload(n=20_000, seed=0):
+    rng = np.random.default_rng(seed)
+    w = (rng.standard_normal(n) * 0.02).astype(ml_dtypes.bfloat16)
+    return np.ascontiguousarray(w).reshape(-1).view(np.uint8).tobytes()
+
+
+@contextlib.contextmanager
+def _no_warnings():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        yield
+
+
+# --- the bag ---------------------------------------------------------------
+
+
+def test_options_frozen_and_hashable():
+    opts = CodecOptions(threads=4, backend="device")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        opts.threads = 8
+    assert hash(opts) == hash(CodecOptions(threads=4, backend="device"))
+    assert opts.replace(threads=1) == CodecOptions(threads=1, backend="device")
+    assert opts.replace(threads=1) is not opts
+
+
+def test_default_options_is_all_defer():
+    assert DEFAULT_OPTIONS == CodecOptions()
+    assert DEFAULT_OPTIONS.threads is None
+    assert DEFAULT_OPTIONS.backend is None
+    assert DEFAULT_OPTIONS.entropy_backend is None
+    assert DEFAULT_OPTIONS.device_resident is False
+
+
+# --- the shim --------------------------------------------------------------
+
+
+def test_resolve_precedence_kwarg_over_field():
+    opts = CodecOptions(threads=4, backend="device", entropy_backend="device")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        merged = resolve_options(opts, threads=1, backend="host")
+    assert merged.threads == 1            # explicit kwarg wins
+    assert merged.backend == "host"       # explicit kwarg wins
+    assert merged.entropy_backend == "device"  # untouched field survives
+
+
+def test_resolve_options_passthrough_no_warning():
+    opts = CodecOptions(threads=2)
+    with _no_warnings():
+        assert resolve_options(opts) is opts
+        assert resolve_options(None) is DEFAULT_OPTIONS
+
+
+def test_legacy_codec_kwargs_warn():
+    for kw in ({"threads": 2}, {"backend": "host"}, {"entropy_backend": "host"}):
+        with pytest.warns(DeprecationWarning):
+            resolve_options(None, **kw)
+
+
+def test_device_resident_kwarg_does_not_warn():
+    with _no_warnings():
+        merged = resolve_options(CodecOptions(), device_resident=True)
+    assert merged.device_resident is True
+
+
+def test_entry_points_warn_on_legacy_not_on_options():
+    raw = _payload(4096)
+    with pytest.warns(DeprecationWarning):
+        legacy = zipnn.compress_bytes(raw, "bfloat16", threads=2)
+    with _no_warnings():
+        bagged = zipnn.compress_bytes(
+            raw, "bfloat16", options=CodecOptions(threads=2)
+        )
+    assert legacy == bagged
+    with _no_warnings():
+        assert zipnn.decompress_bytes(bagged, options=CodecOptions()) == raw
+
+
+def test_explicit_none_options_is_default():
+    raw = _payload(4096)
+    with _no_warnings():
+        assert zipnn.compress_bytes(raw, "bfloat16", options=None) == (
+            zipnn.compress_bytes(raw, "bfloat16")
+        )
+
+
+# --- byte-identity across the knob matrix ----------------------------------
+
+
+def test_session_bytes_identical_across_knob_matrix():
+    """The bag only routes values: session blobs must be byte-identical to
+    the legacy per-kwarg calls AND across every knob combination."""
+    raw = _payload(8192)
+    combos = [
+        CodecOptions(),
+        CodecOptions(threads=1),
+        CodecOptions(threads=4),
+        CodecOptions(backend="device"),
+        CodecOptions(threads=4, backend="device"),
+    ]
+    blobs = []
+    for opts in combos:
+        with _no_warnings():
+            blobs.append(ZipNNSession(options=opts).compress_bytes(raw, "bfloat16"))
+    assert all(b == blobs[0] for b in blobs), "knobs changed bytes"
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = zipnn.compress_bytes(raw, "bfloat16", threads=4, backend="device")
+    assert legacy == blobs[0]
+    for opts in combos:
+        with _no_warnings():
+            assert ZipNNSession(options=opts).decompress_bytes(blobs[0]) == raw
+
+
+def test_session_huffman_entropy_backend_matrix():
+    raw = _payload(4096, seed=3)
+    cfg = zipnn.ZipNNConfig(backend="huffman")
+    host = ZipNNSession(cfg, CodecOptions(backend="host")).compress_bytes(
+        raw, "bfloat16"
+    )
+    dev = ZipNNSession(
+        cfg, CodecOptions(backend="device", entropy_backend="device")
+    ).compress_bytes(raw, "bfloat16")
+    assert host == dev
+    assert (
+        ZipNNSession(
+            cfg, CodecOptions(backend="device", entropy_backend="device")
+        ).decompress_bytes(host)
+        == raw
+    )
+
+
+def test_session_array_pytree_and_delta_route():
+    rng = np.random.default_rng(4)
+    arr = (rng.standard_normal(5000) * 0.02).astype(ml_dtypes.bfloat16)
+    sess = ZipNNSession(options=CodecOptions(threads=2))
+    with _no_warnings():
+        ct = sess.compress_array(arr)
+        back = sess.decompress_array(ct)
+    assert back.tobytes() == arr.tobytes()
+    assert zipnn.compress_array(arr).blob == ct.blob
+
+    tree = {"wte": arr.reshape(50, 100), "step": np.asarray(3, np.int32)}
+    with _no_warnings():
+        manifest = sess.compress_pytree(tree)
+        rt = sess.decompress_pytree(manifest)
+    assert rt["wte"].tobytes() == tree["wte"].tobytes()
+
+    base = arr
+    new = arr.copy()
+    new[:100] = (np.asarray(new[:100], np.float32) * 1.01).astype(arr.dtype)
+    with _no_warnings():
+        d = sess.delta_compress(new, base)
+        restored = sess.delta_decompress(d, base)
+    assert restored.tobytes() == new.tobytes()
+
+
+def test_session_device_resident_override():
+    """device_resident keeps leaves on device when the decode backend
+    resolves to device; host-resolved leaves stay numpy (documented)."""
+    import jax
+
+    arr = (np.random.default_rng(5).standard_normal(2048) * 0.02).astype(
+        np.float32
+    )
+    sess = ZipNNSession(options=CodecOptions(backend="device"))
+    ct = sess.compress_array(arr)
+    host = sess.decompress_array(ct, device_resident=False)
+    assert isinstance(host, np.ndarray)
+    dev = sess.decompress_array(ct, device_resident=True)
+    assert isinstance(dev, jax.Array)
+    assert np.asarray(dev).tobytes() == arr.tobytes()
+
+
+# --- options follow-through on the plumbing surfaces -----------------------
+
+
+def test_grad_sync_accepts_options_bag():
+    from repro.distributed.grad_sync import GradSync
+
+    grads = {"w": (np.random.default_rng(6).standard_normal(4096) * 1e-3
+                   ).astype(np.float32)}
+    with _no_warnings():
+        gs = GradSync(options=CodecOptions(threads=2))
+        manifest, stats = gs.pack(grads)
+        back = gs.unpack(manifest)
+    assert np.asarray(back["w"]).tobytes() == grads["w"].tobytes()
+    with pytest.warns(DeprecationWarning):
+        legacy = GradSync(threads=2)
+    legacy_manifest, legacy_stats = legacy.pack(grads)
+    assert legacy_stats.comp_bytes == stats.comp_bytes
+
+
+def test_hub_simulate_transfer_accepts_options_bag():
+    from repro.checkpoint import hub
+
+    data = _payload(4096, seed=7)
+    with _no_warnings():
+        rep = hub.simulate_transfer(
+            data, "bfloat16", "cached_download_cloud",
+            options=CodecOptions(threads=2),
+        )
+    assert rep.comp_bytes < rep.raw_bytes
+    with pytest.warns(DeprecationWarning):
+        hub.simulate_transfer(
+            data, "bfloat16", "cached_download_cloud", threads=2
+        )
+
+
+def test_checkpoint_config_folds_options(tmp_path):
+    from repro.checkpoint.manager import CheckpointConfig
+
+    cfg = CheckpointConfig(
+        directory=str(tmp_path),
+        options=CodecOptions(threads=3, backend="device",
+                             entropy_backend="host"),
+    )
+    assert cfg.threads == 3
+    assert cfg.backend == "device"
+    assert cfg.entropy_backend == "host"
+    assert cfg.zipnn.threads == 3
+    assert cfg.zipnn.plane_backend == "device"
+    # explicit legacy fields still win over the bag
+    cfg2 = CheckpointConfig(
+        directory=str(tmp_path), threads=1,
+        options=CodecOptions(threads=8),
+    )
+    assert cfg2.threads == 1
+
+
+def test_compressed_param_store_accepts_options_bag():
+    from repro.serve.compressed import CompressedParamStore
+
+    params = {
+        "wte": (np.random.default_rng(8).standard_normal((64, 32)) * 0.02
+                ).astype(ml_dtypes.bfloat16)
+    }
+    with _no_warnings():
+        store = CompressedParamStore.from_params(
+            params, options=CodecOptions(threads=2)
+        )
+    with pytest.warns(DeprecationWarning):
+        legacy = CompressedParamStore.from_params(params, threads=2)
+    assert store.ratio_pct == legacy.ratio_pct

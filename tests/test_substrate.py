@@ -205,6 +205,186 @@ class TestCheckpointManager:
         assert kinds == ["base", "delta", "base"]
 
 
+class TestMomentChains:
+    """Optimizer-moment compression: AdamW m/v delta-vs-previous-save.
+
+    EMA moments drift a little every step, so vs-prev deltas are much
+    sparser than vs-base — moment leaves in delta saves carry kind
+    ``delta_prev`` with ``prev_step`` links, bases store moments in full
+    (bounding the restore chain at ``base_every``), and every step
+    restores bit-exactly through the chain."""
+
+    def _state(self, i, rng):
+        import ml_dtypes
+
+        w = (rng.standard_normal((128, 128)) * 0.02).astype(ml_dtypes.bfloat16)
+        g = (rng.standard_normal((128, 128)) * 1e-3).astype(np.float32)
+        return {
+            "params": {"w": w},
+            "opt": {
+                "m": {"w": g},
+                "v": {"w": np.square(g)},
+                "count": np.asarray(i, np.int32),
+            },
+            "step": np.asarray(i, np.int32),
+        }
+
+    def _drifted(self, steps, seed=0):
+        """A save sequence whose moments drift like EMAs (small per-step
+        change), while params drift independently."""
+        import ml_dtypes
+
+        rng = np.random.default_rng(seed)
+        st = self._state(0, rng)
+        out = [st]
+        for i in range(1, steps):
+            st = {
+                "params": {"w": st["params"]["w"]},
+                "opt": {
+                    "m": {"w": st["opt"]["m"]["w"].copy()},
+                    "v": {"w": st["opt"]["v"]["w"].copy()},
+                    "count": np.asarray(i, np.int32),
+                },
+                "step": np.asarray(i, np.int32),
+            }
+            # ~1% of moment entries move per step (EMA-style slow drift)
+            for key in ("m", "v"):
+                arr = st["opt"][key]["w"].reshape(-1)
+                idx = rng.integers(0, arr.size, arr.size // 100)
+                arr[idx] *= 1.01
+            w = np.asarray(st["params"]["w"], np.float32)
+            idx = rng.integers(0, w.size, w.size // 100)
+            w.reshape(-1)[idx] *= 1.001
+            st["params"]["w"] = w.astype(ml_dtypes.bfloat16)
+            out.append(st)
+        return out
+
+    def _manifest(self, tmp_path, step):
+        import json
+
+        with open(tmp_path / f"step_{step}" / "manifest.json") as f:
+            return json.load(f)
+
+    def test_delta_prev_chain_kinds_and_links(self, tmp_path):
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                str(tmp_path), base_every=3, async_save=False, keep_bases=99
+            )
+        )
+        states = self._drifted(6)
+        for i, st in enumerate(states):
+            mgr.save(i, st, blocking=True)
+        for i in range(6):
+            man = self._manifest(tmp_path, i)
+            kinds = {e["key"]: e["kind"] for e in man["entries"]}
+            if i % 3 == 0:                       # base: moments in full
+                assert kinds["opt/m/w"] == "full"
+                assert kinds["opt/v/w"] == "full"
+                assert man["prev_step"] is None
+            else:                                # delta: moments vs prev save
+                assert kinds["opt/m/w"] == "delta_prev"
+                assert kinds["opt/v/w"] == "delta_prev"
+                assert man["prev_step"] == i - 1
+                assert kinds["params/w"] == "delta"   # params still vs base
+            # non-moment opt leaves never chain
+            assert kinds["opt/count"] in ("full", "delta")
+
+    def test_chain_restores_bit_exact(self, tmp_path):
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                str(tmp_path), base_every=3, async_save=False, keep_bases=99
+            )
+        )
+        states = self._drifted(7, seed=1)
+        for i, st in enumerate(states):
+            mgr.save(i, st, blocking=True)
+        for i, st in enumerate(states):
+            _, back = mgr.restore(i)
+            for key in ("m", "v"):
+                np.testing.assert_array_equal(
+                    back["opt"][key]["w"].view(np.uint8),
+                    st["opt"][key]["w"].view(np.uint8),
+                )
+            np.testing.assert_array_equal(
+                back["params"]["w"].view(np.uint8),
+                st["params"]["w"].view(np.uint8),
+            )
+
+    def test_moment_deltas_beat_full(self, tmp_path):
+        """Slow-drifting moments must compress far better vs-prev than the
+        full moment payload in the base save."""
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                str(tmp_path), base_every=4, async_save=False, keep_bases=99
+            )
+        )
+        states = self._drifted(4, seed=2)
+        for i, st in enumerate(states):
+            mgr.save(i, st, blocking=True)
+        base_man = self._manifest(tmp_path, 0)
+        delta_man = self._manifest(tmp_path, 2)
+        size = lambda man, key: next(
+            e["size"] for e in man["entries"] if e["key"] == key
+        )
+        assert size(delta_man, "opt/m/w") < 0.5 * size(base_man, "opt/m/w")
+        assert size(delta_man, "opt/v/w") < 0.5 * size(base_man, "opt/v/w")
+
+    def test_restart_breaks_chain_safely(self, tmp_path):
+        """The prev-moment snapshot lives in RAM only: a new manager must
+        not emit delta_prev on its first save, and restores stay exact."""
+        cfg = CheckpointConfig(
+            str(tmp_path), base_every=4, async_save=False, keep_bases=99
+        )
+        states = self._drifted(4, seed=3)
+        mgr = CheckpointManager(cfg)
+        mgr.save(0, states[0], blocking=True)
+        mgr.save(1, states[1], blocking=True)
+        mgr2 = CheckpointManager(cfg)            # process restart
+        mgr2.save(2, states[2], blocking=True)
+        man = self._manifest(tmp_path, 2)
+        kinds = {e["key"]: e["kind"] for e in man["entries"]}
+        assert kinds["opt/m/w"] != "delta_prev"
+        assert man["prev_step"] is None
+        _, back = mgr2.restore(2)
+        np.testing.assert_array_equal(
+            back["opt"]["m"]["w"], states[2]["opt"]["m"]["w"]
+        )
+
+    def test_moment_keys_empty_disables_chaining(self, tmp_path):
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                str(tmp_path), base_every=3, async_save=False,
+                keep_bases=99, moment_keys=(),
+            )
+        )
+        for i, st in enumerate(self._drifted(3, seed=4)):
+            mgr.save(i, st, blocking=True)
+        man = self._manifest(tmp_path, 1)
+        kinds = {e["kind"] for e in man["entries"]}
+        assert "delta_prev" not in kinds
+        assert man["prev_step"] is None
+
+    def test_chain_survives_retention_gc(self, tmp_path):
+        """GC deletes whole base segments (base + its deltas), so surviving
+        delta_prev chains always have their predecessors on disk."""
+        mgr = CheckpointManager(
+            CheckpointConfig(
+                str(tmp_path), base_every=3, keep_bases=1, async_save=False
+            )
+        )
+        states = self._drifted(6, seed=5)
+        for i, st in enumerate(states):
+            mgr.save(i, st, blocking=True)
+        remaining = sorted(s["step"] for s in mgr.stats())
+        assert remaining == [3, 4, 5]
+        for i in (3, 4, 5):
+            _, back = mgr.restore(i)
+            np.testing.assert_array_equal(
+                back["opt"]["m"]["w"].view(np.uint8),
+                states[i]["opt"]["m"]["w"].view(np.uint8),
+            )
+
+
 class TestGradSync:
     def test_lossless_and_compressed(self, tiny_setup):
         cfg, model, state = tiny_setup
