@@ -37,8 +37,13 @@ The run ends with the **compressed-resident serving rows** (``serve_rows``,
 skip with ``--no-serve``): the per-layer prefetch/decode ring
 (``repro/serve/compressed.py``) vs the plain jitted decode step — logits
 asserted bit-identical in lockstep, peak decoded residency asserted ≤ 2
-layers, and tokens/sec × HBM weight footprint reported side by side —
-followed by the **KV-tier row** (``kv_serve_rows``): a greedy decode
+layers, and tokens/sec × HBM weight footprint reported side by side.
+The **payload-feed rows** (``serve_feed_rows``) rerun the ring with the
+store's compressed payloads resident in device memory
+(``payload_feed=True``), once whole-layer and once per-tile (``tiles=2``):
+logits stay bit-identical, zero per-token payload uploads after warmup
+are asserted via the transfer counters, and per-tile residency is capped
+at ring × tiles tile slots.  Then the **KV-tier row** (``kv_serve_rows``): a greedy decode
 through ``make_kv_tiered_serve_step`` over a ``KVCacheStore``, logits
 asserted bit-identical to the untiered ``decode_step`` at every step and
 live hot positions asserted ≤ hot_window + block_len.
@@ -281,6 +286,98 @@ def serve_rows(steps: int = 8) -> List[dict]:
     ]
 
 
+def serve_feed_rows(steps: int = 8) -> List[dict]:
+    """Device-resident payload feed rows: the ring with payloads in HBM.
+
+    Same lockstep/bit-identity drill as :func:`serve_rows`, but the store
+    is built with ``payload_feed=True`` under the canonical coder: every
+    layer's packed HUFF words upload to device memory once at build, and
+    each token's decodes re-run the fused Huffman kernel from those
+    resident buffers.  Asserted per row: logits bit-identical, **zero**
+    payload host→device uploads after the warmup token (the module's
+    transfer counters), and — for the ``tiles=2`` row — peak decoded
+    residency ≤ ring × tiles tile slots.  ``comp_pct`` is gated (numpy-
+    seeded params); timings and the resident-payload HBM megabytes are
+    reported only.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import device_entropy
+    from repro.models import build_model
+    from repro.serve import CompressedParamStore, make_compressed_serve_step
+
+    cfg = get_config("repro_gpt_100m").reduced()
+    model = build_model(cfg)
+    rng = np.random.default_rng(0)
+    params, _ = _serve_params(model, rng)
+    zcfg = zipnn.ZipNNConfig(backend="huffman")
+    step = jax.jit(model.decode_step)
+    B = 2
+    toks = [
+        jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+        for _ in range(steps)
+    ]
+
+    rows = []
+    for ring, tiles in ((2, 1), (2, 2)):
+        store = CompressedParamStore.from_params(
+            params, zcfg, payload_feed=True
+        )
+        if store.device_payload_bytes == 0:
+            raise AssertionError("payload feed resident bytes == 0")
+        cstep = make_compressed_serve_step(model, store, ring=ring, tiles=tiles)
+        sa = model.init_decode_state(B, steps, start_pos=0)
+        sb = model.init_decode_state(B, steps, start_pos=0)
+        for i, t in enumerate(toks):
+            if i == 1:          # token 0 is compile warmup; count after it
+                device_entropy.reset_transfer_stats()
+            la, sa = step(params, sa, t)
+            lb, sb = cstep(sb, t)
+            if np.asarray(la).tobytes() != np.asarray(lb).tobytes():
+                raise AssertionError(
+                    f"feed-ring logits != uncompressed logits (tiles={tiles})"
+                )
+        stats = device_entropy.transfer_stats()
+        if stats["payload_uploads"]:
+            raise AssertionError(
+                f"feed ring moved {stats['payload_bytes']} payload bytes "
+                f"host->device after warmup (tiles={tiles})"
+            )
+        if store.peak_resident > ring * tiles:
+            raise AssertionError(
+                f"tile residency {store.peak_resident} > ring*tiles "
+                f"{ring * tiles}"
+            )
+
+        def drive(state):
+            logits = None
+            for t in toks:
+                logits, state = cstep(state, t)
+            jax.block_until_ready(logits)
+
+        s1 = model.init_decode_state(B, steps, start_pos=0)
+        _, t_c = _timed(lambda: drive(s1))
+        rows.append(
+            {"model": "repro-gpt-100m reduced (serve)",
+             "method": "ZipNN(serve-feed)" if tiles == 1
+             else f"ZipNN(serve-feed, tiles={tiles})",
+             "comp_pct": round(store.ratio_pct, 1),
+             "tok_per_s": round(B * steps / t_c, 1),
+             "hbm_weights_mb": round(store.footprint_bytes(ring) / 1e6, 3),
+             "payload_hbm_mb": round(store.device_payload_bytes / 1e6, 3),
+             "comp_gbps": None, "decomp_gbps": None,
+             "parity": "bit-identical logits",
+             "note": "payloads resident in device memory; zero per-token "
+                     "payload uploads after warmup asserted"
+             + ("" if tiles == 1 else
+                f"; peak residency <= ring*tiles = {ring * tiles} tile "
+                "slots asserted")},
+        )
+    return rows
+
+
 def run(
     threads: int = 1, backends: Sequence[str] = ("host",), n: int = N,
     serve: bool = True,
@@ -423,6 +520,7 @@ def run(
     rows += component_rows(n, reps=reps)
     if serve:
         rows += serve_rows()
+        rows += serve_feed_rows()
         rows += kv_serve_rows()
     return rows
 

@@ -218,6 +218,36 @@ def main():
           f"{100 * kv_store.cold_comp_bytes / max(kv_store.cold_raw_bytes, 1):.1f}% "
           "of raw, logits bit-identical ✓")
 
+    # 12. Device-resident payload feed + per-tile decode: the last host
+    # bounce goes away.  payload_feed=True parses every layer's ZNN1
+    # payload ONCE at store build — CRC/cursor integrity checked up front,
+    # packed Huffman words uploaded to device memory once — and each ring
+    # decode re-runs the fused decoder straight from those resident
+    # buffers: zero host→device payload traffic per token after warmup
+    # (device_entropy's transfer counters are the proof hook).  tiles=2
+    # additionally splits each layer into contiguous tensor-groups, so the
+    # first group is compute-ready before the layer's last tensor decodes
+    # and residency is accounted per tile slot (≤ ring × tiles).  Both are
+    # wall-clock/memory knobs only: logits stay bit-identical.
+    from repro.core import device_entropy
+
+    feed_store = CompressedParamStore.from_params(params, payload_feed=True)
+    fstep = make_compressed_serve_step(model, feed_store, ring=2, tiles=2)
+    sc = model.init_decode_state(2, 4, start_pos=0)
+    sd = model.init_decode_state(2, 4, start_pos=0)
+    _, sc = fstep(sc, toks)                      # warmup: compile + first ring
+    _, sd = step(params, sd, toks)
+    device_entropy.reset_transfer_stats()
+    for _ in range(3):
+        lc, sc = fstep(sc, toks)
+        ld, sd = step(params, sd, toks)
+        assert np.asarray(lc).tobytes() == np.asarray(ld).tobytes()
+    assert device_entropy.transfer_stats()["payload_uploads"] == 0
+    assert feed_store.peak_resident <= 2 * 2     # ring × tiles tile slots
+    print(f"payload feed: {feed_store.device_payload_bytes / 1e3:.0f} kB "
+          "resident payloads, 0 per-token uploads, per-tile ring logits "
+          "bit-identical ✓")
+
     # The byte-identity contract demonstrated above is also enforced
     # statically: `python -m repro.analysis --strict` (zipnn-lint) checks
     # determinism, knob threading, the container spec and the Pallas kernel

@@ -62,7 +62,9 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/fixtures/generate_fixtu
 # the device entropy stage on BOTH sides: the fused Huffman bit-pack on
 # encode, and the device Huffman decoder kernel on decode (every sweep row
 # and golden fixture also decodes with entropy_backend=device, asserted
-# bit-exact against the raw bytes).
+# bit-exact against the raw bytes).  The payload-resident rows decode each
+# eligible stream through the parse-once ArrayFeed and assert bit equality
+# plus zero per-decode payload uploads.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 
 # Fast host/device backend parity smoke: small corpus through the Table 3
@@ -71,8 +73,11 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tests/parity.py --smoke
 # device-entropy decoder rows alike — bit-identical to the raw bytes
 # (interpret mode on CPU-only hosts) and writes the result JSON.  The
 # serve rows double as the serving smokes: ring logits bit-identical and
-# residency <= 2 layers, and the KV-cache tier (serve/kvcache.py) decoded
-# in lockstep with logits asserted bit-identical to the untiered step.
+# residency <= 2 layers; the payload-feed rows rerun the ring with the
+# compressed payloads resident in device memory (whole-layer and per-tile)
+# and assert zero per-token payload uploads after warmup; and the KV-cache
+# tier (serve/kvcache.py) decodes in lockstep with logits asserted
+# bit-identical to the untiered step.
 # The component rows pin the KV/moment/fp8/int8 payload ratios.
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.table3_speed \
     --backend both --n 120000 --json BENCH_table3_smoke.json

@@ -59,8 +59,9 @@ regardless of the configured encode backend.
 from __future__ import annotations
 
 import functools
+import threading
 import zlib
-from typing import Any, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -68,6 +69,8 @@ from . import bitlayout, codec, huffman
 
 __all__ = [
     "BACKENDS",
+    "LUT_CACHE_SIZE",
+    "PayloadFeed",
     "is_available",
     "supports",
     "supports_decode",
@@ -75,6 +78,8 @@ __all__ = [
     "resolve_decode",
     "encode_planes",
     "decode_planes",
+    "transfer_stats",
+    "reset_transfer_stats",
 ]
 
 BACKENDS = ("host", "device", "auto")
@@ -82,7 +87,49 @@ BACKENDS = ("host", "device", "auto")
 # One fused dispatch is capped so symbols + packed words (2× the HUFF chunk
 # bytes) stay comfortably in device memory; larger jobs split into several
 # launches (payload bytes are per-chunk, so splitting never changes them).
-MAX_BATCH_BYTES = 256 << 20
+# Shares device_plane's env-tunable cap (ZIPNN_MAX_BATCH_BYTES) — window
+# size changes wall-clock and peak memory only, never bytes.
+from .device_plane import MAX_BATCH_BYTES  # noqa: E402
+
+# _stacked_luts_cached's lru_cache bound.  The cache is keyed on raw table
+# bytes, so a long-lived serving session decoding many *distinct* stores
+# would grow host memory without limit if unbounded; 64 entries cover every
+# plane-table combination a realistic ring re-decodes while still evicting
+# dead stores.  Asserted by tests (cache_info().maxsize).
+LUT_CACHE_SIZE = 64
+
+
+# ---------------------------------------------------------------------------
+# transfer instrumentation
+# ---------------------------------------------------------------------------
+#
+# Every payload-sized host→device upload on this module's encode/decode
+# paths is tallied here: HUFF symbol uploads (_pack_jobs host path), packed
+# word uploads (_unpack_jobs / PayloadFeed build) and the non-HUFF splice
+# upload.  The counters are the test hook behind the device-resident feed's
+# headline contract — zero per-token payload uploads after warmup — and
+# count bookkeeping only: they never touch the data path.
+
+_transfer_lock = threading.Lock()
+_transfer_stats: Dict[str, int] = {"payload_uploads": 0, "payload_bytes": 0}
+
+
+def _count_payload_upload(nbytes: int) -> None:
+    with _transfer_lock:
+        _transfer_stats["payload_uploads"] += 1
+        _transfer_stats["payload_bytes"] += int(nbytes)
+
+
+def transfer_stats() -> Dict[str, int]:
+    """Snapshot of payload host→device upload counters (test hook)."""
+    with _transfer_lock:
+        return dict(_transfer_stats)
+
+
+def reset_transfer_stats() -> None:
+    with _transfer_lock:
+        for k in _transfer_stats:
+            _transfer_stats[k] = 0
 
 
 def is_available() -> bool:
@@ -177,6 +224,46 @@ def resolve_decode(
 PlaneResult = Tuple[List[codec.ChunkEntry], List[bytes], Optional[bytes]]
 
 
+def _gather_syms_device(
+    planes: Sequence[np.ndarray],
+    jobs: Sequence[Tuple[int, int, int]],
+    chunk_bytes: int,
+):
+    """HUFF symbols for ``jobs`` gathered from device-resident plane rows.
+
+    Returns a flat ``(len(jobs) * chunk_bytes,)`` device uint8 array, or
+    ``None`` when any referenced plane lacks its device twin (host-planed
+    leaves, mismatched chunk geometry) or the jobs are not plane-major —
+    the caller then builds the symbols host-side as before.  Only the
+    chunk-id index vectors cross host→device (metadata-sized); the symbol
+    bytes themselves never leave the device.
+    """
+    import jax.numpy as jnp
+
+    if not jobs:
+        return None
+    for k in range(1, len(jobs)):
+        if jobs[k][0] < jobs[k - 1][0]:
+            return None                     # per-plane grouping would reorder
+    parts = []
+    i = 0
+    while i < len(jobs):
+        p = jobs[i][0]
+        j = i
+        while j < len(jobs) and jobs[j][0] == p:
+            j += 1
+        dev = getattr(planes[p], "dev_chunks", None)
+        if dev is None or dev.ndim != 2 or dev.shape[1] != chunk_bytes:
+            return None
+        ids = np.asarray([ch for (_, ch, _) in jobs[i:j]], dtype=np.int32)
+        if ids.size and int(ids.max()) >= dev.shape[0]:
+            return None
+        parts.append(dev[jnp.asarray(ids)])
+        i = j
+    mat = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+    return mat.reshape(-1)
+
+
 def _pack_jobs(
     planes: Sequence[np.ndarray],
     jobs: Sequence[Tuple[int, int, int]],
@@ -190,6 +277,12 @@ def _pack_jobs(
     partial chunk (``size < chunk_bytes``) is zero-padded on the symbol side
     and its pad bits are subtracted/masked on the host side — byte-identical
     to encoding exactly ``size`` symbols.
+
+    When the planes are the device producer's :class:`~repro.core.
+    device_plane.PlanedArray` twins, the HUFF symbols are **gathered on
+    device** from the still-resident chunk rows instead of re-uploaded from
+    host — the rows carry the identical zero padding, so the packed bits
+    cannot differ.
     """
     import jax
     import jax.numpy as jnp
@@ -197,14 +290,21 @@ def _pack_jobs(
     from repro.kernels import bitpack
 
     c = len(jobs)
-    syms = np.zeros(c * chunk_bytes, dtype=np.uint8)
     pids = np.empty(c, dtype=np.int32)
     for k, (p, ch, size) in enumerate(jobs):
-        start = ch * chunk_bytes
-        syms[k * chunk_bytes : k * chunk_bytes + size] = planes[p][start : start + size]
         pids[k] = p
+    syms_dev = _gather_syms_device(planes, jobs, chunk_bytes)
+    if syms_dev is None:
+        syms = np.zeros(c * chunk_bytes, dtype=np.uint8)
+        for k, (p, ch, size) in enumerate(jobs):
+            start = ch * chunk_bytes
+            syms[k * chunk_bytes : k * chunk_bytes + size] = (
+                planes[p][start : start + size]
+            )
+        _count_payload_upload(syms.nbytes)
+        syms_dev = jnp.asarray(syms)
     words, nbits = bitpack.bitpack_encode_chunks_multi(
-        jnp.asarray(syms),
+        syms_dev,
         jnp.asarray(pids),
         jnp.asarray(len_tables),
         jnp.asarray(code_tables),
@@ -333,7 +433,7 @@ def _stacked_luts(
     return _stacked_luts_cached(tuple(tables_all))
 
 
-@functools.lru_cache(maxsize=64)
+@functools.lru_cache(maxsize=LUT_CACHE_SIZE)
 def _stacked_luts_cached(
     tables_all: Tuple[Optional[bytes], ...],
 ) -> Tuple[np.ndarray, int]:
@@ -356,30 +456,20 @@ def _stacked_luts_cached(
     return luts, max_l
 
 
-def _unpack_jobs(
+def _pack_words(
     jobs: Sequence[Tuple[int, int]],
     entries_all: Sequence[Sequence[codec.ChunkEntry]],
     payloads_all: Sequence[Sequence[bytes]],
-    luts: np.ndarray,
     chunk_bytes: int,
-):
-    """Run one fused decode dispatch over ``jobs``; return device symbols.
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pack each job's payload bytes into the decode kernel's word layout.
 
-    ``jobs`` is ``(plane_idx, chunk_idx)`` per HUFF chunk.  Payload bytes
-    pack into big-endian uint32 words (the encode kernel's bit convention),
-    zero-padded to the ``chunk_bytes`` capacity — valid payloads are always
-    shorter (expansion guard), and oversized ones are rejected up front so
-    corrupt metadata can never drive an out-of-range copy.  After the
-    launch the per-chunk bit cursors (a metadata-sized transfer) feed the
-    same integrity checks as ``huffman.decode_many``: the cursor must land
-    inside the payload's final byte and the 0-7 pad bits must be zero —
-    truncated or flipped words fail cleanly, never silently.
+    Payload bytes pack into big-endian uint32 words (the encode kernel's
+    bit convention), zero-padded to the ``chunk_bytes`` capacity — valid
+    payloads are always shorter (expansion guard), and oversized ones are
+    rejected up front so corrupt metadata can never drive an out-of-range
+    copy.  Returns ``(words, plane_ids, counts, payload_sizes)``.
     """
-    import jax
-    import jax.numpy as jnp
-
-    from repro.kernels import huffdecode
-
     c = len(jobs)
     cw = chunk_bytes // 4
     words = np.zeros(c * cw, dtype=np.uint32)
@@ -398,15 +488,21 @@ def _unpack_jobs(
         pids[k] = p
         counts[k] = entries_all[p][ch].raw_len
         sizes[k] = len(payload)
-    syms, cursors = huffdecode.huffdecode_chunks_multi(
-        jnp.asarray(words),
-        jnp.asarray(pids),
-        jnp.asarray(counts),
-        jnp.asarray(luts),
-        chunk_bytes=chunk_bytes,
-        interpret=jax.default_backend() != "tpu",
-    )
-    cursors_h = np.asarray(jax.device_get(cursors), dtype=np.int64)
+    return words, pids, counts, sizes
+
+
+def _check_cursors(
+    jobs: Sequence[Tuple[int, int]],
+    payloads_all: Sequence[Sequence[bytes]],
+    sizes: np.ndarray,
+    cursors_h: np.ndarray,
+) -> None:
+    """The ``decode_many``-equivalent integrity checks on kernel cursors.
+
+    Each chunk's final bit cursor must land inside its payload's final byte
+    and the 0-7 pad bits must be zero — truncated or flipped words fail
+    cleanly, never silently.
+    """
     slack = sizes * 8 - cursors_h
     if np.any((slack < 0) | (slack >= 8)):
         raise ValueError(
@@ -421,7 +517,129 @@ def _unpack_jobs(
                 "corrupt Huffman payload: nonzero pad bits in the chunk's "
                 "final byte"
             )
+
+
+def _unpack_jobs(
+    jobs: Sequence[Tuple[int, int]],
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    luts: np.ndarray,
+    chunk_bytes: int,
+):
+    """Run one fused decode dispatch over ``jobs``; return device symbols.
+
+    ``jobs`` is ``(plane_idx, chunk_idx)`` per HUFF chunk.  The packed
+    words are uploaded for this launch only (the :class:`PayloadFeed` path
+    instead uploads them once and re-decodes from device memory); after the
+    launch the per-chunk bit cursors (a metadata-sized transfer) feed the
+    same integrity checks as ``huffman.decode_many``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import huffdecode
+
+    words, pids, counts, sizes = _pack_words(
+        jobs, entries_all, payloads_all, chunk_bytes
+    )
+    _count_payload_upload(words.nbytes)
+    syms, cursors = huffdecode.huffdecode_chunks_multi(
+        jnp.asarray(words),
+        jnp.asarray(pids),
+        jnp.asarray(counts),
+        jnp.asarray(luts),
+        chunk_bytes=chunk_bytes,
+        interpret=jax.default_backend() != "tpu",
+    )
+    cursors_h = np.asarray(jax.device_get(cursors), dtype=np.int64)
+    _check_cursors(jobs, payloads_all, sizes, cursors_h)
     return syms
+
+
+def _verify_payload_crcs(
+    flat: Sequence[Tuple[int, int]],
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    pool=None,
+) -> None:
+    """CRC-verify every chunk payload (same errors and order as
+    :meth:`~repro.core.codec.PlaneCodec.decode_into`), fanned across
+    ``pool``."""
+
+    def verify(ids):
+        for k in ids:
+            p, c = flat[k]
+            e = entries_all[p][c]
+            if e.method == codec.Method.ZERO:
+                if e.comp_len or e.crc:
+                    raise IOError(
+                        "corrupt chunk entry: ZERO chunk with a payload"
+                    )
+            elif zlib.crc32(payloads_all[p][c]) != e.crc:
+                raise IOError(f"chunk payload CRC mismatch (chunk {c})")
+        return [None] * len(ids)
+
+    codec._fan_out(pool, len(flat), verify)
+
+
+def _huff_jobs(
+    flat: Sequence[Tuple[int, int]],
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    tables_all: Sequence[Optional[bytes]],
+) -> List[Tuple[int, int]]:
+    """The stream's HUFF ``(plane, chunk)`` jobs, validated against its
+    tables (a HUFF chunk without a plane table, or with an empty non-empty
+    payload, is corrupt metadata)."""
+    jobs = [
+        (p, c) for (p, c) in flat
+        if entries_all[p][c].method == codec.Method.HUFF
+    ]
+    for p in sorted({p for (p, _) in jobs}):
+        if tables_all[p] is None:
+            raise IOError("corrupt stream: HUFF chunks but no plane table")
+    if any(
+        not payloads_all[p][c] and entries_all[p][c].raw_len for (p, c) in jobs
+    ):
+        raise IOError("corrupt chunk entry: empty HUFF payload")
+    return jobs
+
+
+def _decode_other_chunks(
+    others: Sequence[Tuple[int, int]],
+    entries_all: Sequence[Sequence[codec.ChunkEntry]],
+    payloads_all: Sequence[Sequence[bytes]],
+    pool=None,
+) -> Dict[Tuple[int, int], np.ndarray]:
+    """Host-decode every non-HUFF chunk (identical decode + integrity
+    checks to ``PlaneCodec.decode_into``), fanned across ``pool``."""
+
+    def decode_other(ids):
+        out = []
+        for k in ids:
+            p, c = others[k]
+            e = entries_all[p][c]
+            payload = payloads_all[p][c]
+            if e.method == codec.Method.ZERO:
+                out.append(np.zeros(e.raw_len, dtype=np.uint8))
+            elif e.method == codec.Method.STORE:
+                if e.comp_len != e.raw_len:
+                    raise IOError(
+                        "corrupt chunk entry: STORE length != raw length"
+                    )
+                out.append(np.frombuffer(payload, dtype=np.uint8))
+            elif e.method in (codec.Method.ZLIB, codec.Method.HUFFLIB):
+                blob = codec._unzlib(payload, e.raw_len)
+                if len(blob) != e.raw_len:
+                    raise IOError(
+                        "corrupt zlib chunk payload: wrong decoded length"
+                    )
+                out.append(np.frombuffer(blob, dtype=np.uint8))
+            else:
+                raise ValueError(f"unknown method {e.method}")
+        return out
+
+    return dict(zip(others, codec._fan_out(pool, len(others), decode_other)))
 
 
 def decode_planes(
@@ -455,34 +673,8 @@ def decode_planes(
         for p in range(len(entries_all))
         for c in range(len(entries_all[p]))
     ]
-
-    def verify(ids):
-        for k in ids:
-            p, c = flat[k]
-            e = entries_all[p][c]
-            if e.method == codec.Method.ZERO:
-                if e.comp_len or e.crc:
-                    raise IOError(
-                        "corrupt chunk entry: ZERO chunk with a payload"
-                    )
-            elif zlib.crc32(payloads_all[p][c]) != e.crc:
-                raise IOError(f"chunk payload CRC mismatch (chunk {c})")
-        return [None] * len(ids)
-
-    codec._fan_out(pool, len(flat), verify)
-
-    jobs = [
-        (p, c) for (p, c) in flat
-        if entries_all[p][c].method == codec.Method.HUFF
-    ]
-    huff_planes = {p for (p, _) in jobs}
-    for p in huff_planes:
-        if tables_all[p] is None:
-            raise IOError("corrupt stream: HUFF chunks but no plane table")
-    if any(
-        not payloads_all[p][c] and entries_all[p][c].raw_len for (p, c) in jobs
-    ):
-        raise IOError("corrupt chunk entry: empty HUFF payload")
+    _verify_payload_crcs(flat, entries_all, payloads_all, pool)
+    jobs = _huff_jobs(flat, entries_all, payloads_all, tables_all)
 
     huff_syms: dict = {}
     if jobs:
@@ -502,35 +694,7 @@ def decode_planes(
         (p, c) for (p, c) in flat
         if entries_all[p][c].method != codec.Method.HUFF
     ]
-
-    def decode_other(ids):
-        out = []
-        for k in ids:
-            p, c = others[k]
-            e = entries_all[p][c]
-            payload = payloads_all[p][c]
-            if e.method == codec.Method.ZERO:
-                out.append(np.zeros(e.raw_len, dtype=np.uint8))
-            elif e.method == codec.Method.STORE:
-                if e.comp_len != e.raw_len:
-                    raise IOError(
-                        "corrupt chunk entry: STORE length != raw length"
-                    )
-                out.append(np.frombuffer(payload, dtype=np.uint8))
-            elif e.method in (codec.Method.ZLIB, codec.Method.HUFFLIB):
-                blob = codec._unzlib(payload, e.raw_len)
-                if len(blob) != e.raw_len:
-                    raise IOError(
-                        "corrupt zlib chunk payload: wrong decoded length"
-                    )
-                out.append(np.frombuffer(blob, dtype=np.uint8))
-            else:
-                raise ValueError(f"unknown method {e.method}")
-        return out
-
-    other_chunks = dict(
-        zip(others, codec._fan_out(pool, len(others), decode_other))
-    )
+    other_chunks = _decode_other_chunks(others, entries_all, payloads_all, pool)
 
     if not device_resident:
         planes: List[Any] = []
@@ -565,9 +729,9 @@ def decode_planes(
             splice_off[key] = (off, off + piece.size)
             parts.append(piece)
             off += piece.size
-        splice_dev = jnp.asarray(
-            np.concatenate(parts) if len(parts) > 1 else parts[0]
-        )
+        cat = np.concatenate(parts) if len(parts) > 1 else parts[0]
+        _count_payload_upload(cat.nbytes)
+        splice_dev = jnp.asarray(cat)
     planes = []
     for p in range(len(entries_all)):
         entries = entries_all[p]
@@ -585,3 +749,168 @@ def decode_planes(
         else:
             planes.append(jnp.concatenate(pieces))
     return planes
+
+
+# ---------------------------------------------------------------------------
+# device-resident payload feed
+# ---------------------------------------------------------------------------
+
+class PayloadFeed:
+    """Device-resident decode plan for one parsed ZNN1 stream.
+
+    :func:`decode_planes` re-reads host payload bytes, re-packs kernel words
+    and re-uploads them on *every* call — fine for one-shot restores, wasted
+    work for the serving ring, which decodes the same immutable payloads
+    every token.  A feed front-loads all of that exactly once:
+
+    * payload CRCs, the ``decode_many``-equivalent bit-cursor / pad-bit
+      checks, and the HUFF metadata validation run **at build time** (the
+      payloads are immutable once parsed, so one verification covers every
+      later decode — and the warmup launch that produces the cursors also
+      compiles the dispatch);
+    * the packed HUFF words, stacked LUTs and the host-decoded
+      ``ZERO``/``STORE``/``ZLIB`` splice bytes upload **once** and stay
+      resident in device memory;
+    * :meth:`decode` then re-runs the fused kernel directly from those
+      resident buffers — **zero host→device payload traffic per decode**
+      (asserted via :func:`transfer_stats`), returning device planes
+      byte-identical to ``decode_planes(..., device_resident=True)``.
+
+    Residency and caching change wall-clock and memory only, never bytes:
+    the kernel consumes the exact words ``_pack_words`` would rebuild, so
+    decoded planes cannot differ from the per-call path.
+    """
+
+    def __init__(
+        self,
+        entries_all: Sequence[Sequence[codec.ChunkEntry]],
+        payloads_all: Sequence[Sequence[bytes]],
+        tables_all: Sequence[Optional[bytes]],
+        params: codec.CodecParams,
+        pool=None,
+    ):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import huffdecode
+
+        cb = params.chunk_bytes
+        if not supports_decode(cb):
+            raise ValueError(
+                "device payload feed requires whole-uint32-word chunks "
+                f"(chunk_bytes % 4 == 0, got {cb}) and an importable jax"
+            )
+        self.chunk_bytes = cb
+        self._interpret = jax.default_backend() != "tpu"
+        # Decode-time assembly needs only (method, raw_len) per chunk; the
+        # payload bytes themselves are not retained host-side.
+        self._meta = [
+            [(int(e.method), int(e.raw_len)) for e in entries]
+            for entries in entries_all
+        ]
+
+        flat = [
+            (p, c)
+            for p in range(len(entries_all))
+            for c in range(len(entries_all[p]))
+        ]
+        _verify_payload_crcs(flat, entries_all, payloads_all, pool)
+        jobs = _huff_jobs(flat, entries_all, payloads_all, tables_all)
+
+        self._luts = None
+        self._windows: List[Tuple[Tuple[Tuple[int, int], ...], Any, Any, Any]] = []
+        if jobs:
+            luts, _ = _stacked_luts(tables_all)
+            self._luts = jnp.asarray(luts)
+            per_launch = max(1, MAX_BATCH_BYTES // (2 * cb))
+            for lo in range(0, len(jobs), per_launch):
+                batch = jobs[lo : lo + per_launch]
+                words, pids, counts, sizes = _pack_words(
+                    batch, entries_all, payloads_all, cb
+                )
+                _count_payload_upload(words.nbytes)
+                wd = jnp.asarray(words)
+                pd = jnp.asarray(pids)
+                cd = jnp.asarray(counts)
+                # Warmup launch: compiles the dispatch and runs the cursor /
+                # pad-bit integrity checks once for the feed's lifetime.
+                _syms, cursors = huffdecode.huffdecode_chunks_multi(
+                    wd, pd, cd, self._luts,
+                    chunk_bytes=cb,
+                    interpret=self._interpret,
+                )
+                cursors_h = np.asarray(jax.device_get(cursors), dtype=np.int64)
+                _check_cursors(batch, payloads_all, sizes, cursors_h)
+                self._windows.append((tuple(batch), wd, pd, cd))
+
+        others = [
+            (p, c) for (p, c) in flat
+            if entries_all[p][c].method != codec.Method.HUFF
+        ]
+        other_chunks = _decode_other_chunks(others, entries_all, payloads_all, pool)
+        self._splice = None
+        self._splice_off: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        if others:
+            off = 0
+            parts = []
+            for key in others:
+                piece = other_chunks[key]
+                self._splice_off[key] = (off, off + piece.size)
+                parts.append(piece)
+                off += piece.size
+            cat = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            _count_payload_upload(cat.nbytes)
+            self._splice = jnp.asarray(cat)
+
+    @property
+    def n_planes(self) -> int:
+        return len(self._meta)
+
+    @property
+    def device_bytes(self) -> int:
+        """Resident HBM footprint of the feed's payload buffers."""
+        total = sum(int(wd.nbytes) for (_, wd, _, _) in self._windows)
+        if self._splice is not None:
+            total += int(self._splice.nbytes)
+        return total
+
+    def decode(self) -> List[Any]:
+        """Device planes for this stream, straight from resident buffers.
+
+        Byte-identical to ``decode_planes(..., device_resident=True)`` on
+        the same parsed stream; no host payload bytes are touched and no
+        payload-sized host→device transfer occurs.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels import huffdecode
+
+        huff_syms: dict = {}
+        for batch, wd, pd, cd in self._windows:
+            # Cursors were integrity-checked at build; the payload words are
+            # immutable, so re-checking per decode would re-verify the same
+            # bits — drop them without a device→host transfer.
+            syms, _cursors = huffdecode.huffdecode_chunks_multi(
+                wd, pd, cd, self._luts,
+                chunk_bytes=self.chunk_bytes,
+                interpret=self._interpret,
+            )
+            for k, key in enumerate(batch):
+                huff_syms[key] = syms[k]
+
+        planes: List[Any] = []
+        for p, metas in enumerate(self._meta):
+            pieces = []
+            for c, (m, raw_len) in enumerate(metas):
+                if m == codec.Method.HUFF:
+                    pieces.append(huff_syms[(p, c)][:raw_len])
+                else:
+                    lo, hi = self._splice_off[(p, c)]
+                    pieces.append(self._splice[lo:hi])
+            if not pieces:
+                planes.append(np.empty(0, dtype=np.uint8))
+            elif len(pieces) == 1:
+                planes.append(pieces[0])
+            else:
+                planes.append(jnp.concatenate(pieces))
+        return planes

@@ -46,6 +46,7 @@ chunk histogram.
 from __future__ import annotations
 
 import math
+import os
 from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -54,6 +55,8 @@ from . import bitlayout, codec
 
 __all__ = [
     "BACKENDS",
+    "DEFAULT_BATCH_BYTES",
+    "PlanedArray",
     "is_available",
     "supports",
     "resolve",
@@ -63,10 +66,59 @@ __all__ = [
 
 BACKENDS = ("host", "device", "auto")
 
+DEFAULT_BATCH_BYTES = 256 << 20
+
+
+def _batch_bytes_from_env(default: int = DEFAULT_BATCH_BYTES) -> int:
+    """Resolve the launch-window cap, honoring ``ZIPNN_MAX_BATCH_BYTES``.
+
+    Real-TPU tuning runs sweep the window without editing source.  The env
+    var is read once at import and must be a positive integer (plain or
+    ``0x``-prefixed).  Window size is exempt from the determinism rules by
+    construction: launches split on per-chunk boundaries, and payload bytes
+    are per-chunk, so the cap changes wall-clock and peak memory only —
+    never bytes (the same reason the ``threads`` knob is byte-safe).
+    """
+    raw = os.environ.get("ZIPNN_MAX_BATCH_BYTES")
+    if raw is None:
+        return default
+    try:
+        value = int(raw, 0)
+    except ValueError:
+        raise ValueError(
+            f"ZIPNN_MAX_BATCH_BYTES={raw!r} is not an integer byte count"
+        ) from None
+    if value <= 0:
+        raise ValueError(
+            f"ZIPNN_MAX_BATCH_BYTES must be positive, got {value}"
+        )
+    return value
+
+
 # One batched dispatch is capped so the packed element grid (+ its planes)
 # stays comfortably in device memory; larger groups split into several
-# launches.
-MAX_BATCH_BYTES = 256 << 20
+# launches.  Env-tunable — see _batch_bytes_from_env.
+MAX_BATCH_BYTES = _batch_bytes_from_env()
+
+
+class PlanedArray(np.ndarray):
+    """Host plane bytes that also carry their device-resident twin.
+
+    The fused plane producer computes every plane ON DEVICE and downloads a
+    host copy for the codec's plan/finalize passes.  Historically the device
+    buffer was then dropped, and the entropy stage re-uploaded HUFF-chunk
+    symbols it had just downloaded.  ``PlanedArray`` keeps the device copy
+    reachable: ``dev_chunks`` is the same plane as a ``(n_chunks,
+    chunk_bytes)`` device array (zero-padded final chunk — the exact symbol
+    rows the bit-pack kernel consumes), so ``device_entropy._pack_jobs``
+    gathers symbols on device instead of re-uploading them.
+
+    Any slice / view / ufunc result drops the device reference
+    (``__array_finalize__``): the pairing is only valid for the whole plane.
+    """
+
+    def __array_finalize__(self, obj) -> None:
+        self.dev_chunks = None
 
 
 def is_available() -> bool:
@@ -305,6 +357,7 @@ def produce_planes_batched(
     # + probe histograms together.
     planes_host, hists_host = jax.device_get((planes2d, hists_dev))
     flat = [np.asarray(p).reshape(-1) for p in planes_host]
+    flat_dev = [p.reshape(-1) for p in planes2d]   # stays resident on device
     hists = np.asarray(hists_host).astype(np.int64)  # (chunks, n_planes, 256)
 
     out = []
@@ -319,7 +372,13 @@ def produce_planes_batched(
             )
             continue
         n_chunks = (s + pad) // cb
-        leaf_planes = [f[off : off + s] for f in flat]
+        # Host copy drives plan/probe/finalize; the device twin rides along
+        # chunk-rowed so the entropy stage never re-uploads HUFF symbols.
+        leaf_planes: List[np.ndarray] = []
+        for f, fd in zip(flat, flat_dev):
+            host = f[off : off + s].view(PlanedArray)
+            host.dev_chunks = fd[off : off + s + pad].reshape(n_chunks, cb)
+            leaf_planes.append(host)
         leaf_h = hists[choff : choff + n_chunks].copy()
         if pad:
             leaf_h[-1, :, 0] -= pad              # padding is all-zero bytes

@@ -86,6 +86,7 @@ import os
 import struct
 import threading
 import zlib
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import IO, Iterator, Optional, Tuple, Union
 
@@ -203,13 +204,13 @@ class CompressWriter:
     never materialized.  Windows are aligned down to the dtype itemsize so
     only the final frame can carry an unaligned ``TAIL`` remainder.
 
-    With ``threads > 1`` the writer is **frame-pipelined**: one window's
-    compression runs on a dedicated pipeline thread (its (plane, chunk)
-    work items still fan across the engine pool) while the caller reads and
-    buffers the next window.  At most one frame is in flight, frames are
+    With ``threads > 1`` the writer is **frame-pipelined**: up to
+    ``pipeline_depth`` windows compress concurrently on dedicated pipeline
+    threads (their (plane, chunk) work items still fan across the engine
+    pool) while the caller reads and buffers the next window.  Frames are
     written strictly in submission order, and the compression itself is
     deterministic — pipelined output files are byte-identical to serial
-    ones.  Peak extra memory grows by one in-flight window.
+    ones.  Peak extra memory grows by ``pipeline_depth`` in-flight windows.
     """
 
     def __init__(
@@ -223,6 +224,7 @@ class CompressWriter:
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
         options: Optional[CodecOptions] = None,
+        pipeline_depth: int = 2,
     ):
         from . import bitlayout, zipnn   # lazy: zipnn imports this module
 
@@ -230,6 +232,10 @@ class CompressWriter:
             options, threads=threads, backend=backend,
             entropy_backend=entropy_backend,
         )
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}"
+            )
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if opts.threads is None else opts.threads
         self._backend = opts.backend
@@ -243,12 +249,14 @@ class CompressWriter:
         self._buf = bytearray()
         self._fp, self._own = _open(fp, "wb")
         self._closed = False
-        # Frame pipeline: a single-slot double buffer.  The in-flight frame
-        # compresses on this dedicated thread — NOT on the engine pool, so a
-        # writer can never deadlock the pool that its own chunk work items
-        # need — and is drained (written) before the next one is submitted.
+        # Frame pipeline: up to pipeline_depth windows compress concurrently
+        # on these dedicated threads — NOT on the engine pool, so a writer
+        # can never deadlock the pool that its own chunk work items need.
+        # Frames are written strictly in submission order (the deque is the
+        # ordering barrier), so the file bytes cannot depend on the depth.
+        self._depth = pipeline_depth
         self._pipe: Optional[ThreadPoolExecutor] = None
-        self._pending = None            # (raw_len, Future[bytes]) in flight
+        self._pending: deque = deque()  # (raw_len, Future[bytes]) in flight
         self.raw_bytes = 0
         self.comp_bytes = 0
         hdr = _SHDR.pack(
@@ -284,18 +292,20 @@ class CompressWriter:
         if resolve_threads(self._threads) <= 1:
             self._write_frame(len(raw), self._compress(raw))
             return
-        self._drain()
+        while len(self._pending) >= self._depth:
+            raw_len, fut = self._pending.popleft()
+            self._write_frame(raw_len, fut.result())
         if self._pipe is None:
             self._pipe = ThreadPoolExecutor(
-                max_workers=1, thread_name_prefix="zipnn-frame-pipe"
+                max_workers=self._depth, thread_name_prefix="zipnn-frame-pipe"
             )
-        self._pending = (len(raw), self._pipe.submit(self._compress, raw))
+        self._pending.append((len(raw), self._pipe.submit(self._compress, raw)))
 
     def _drain(self) -> None:
-        """Wait for the in-flight frame and write it (ordering barrier)."""
-        if self._pending is not None:
-            raw_len, fut = self._pending
-            self._pending = None
+        """Wait for every in-flight frame and write them in submission
+        order (the ordering barrier)."""
+        while self._pending:
+            raw_len, fut = self._pending.popleft()
             self._write_frame(raw_len, fut.result())
 
     def _write_frame(self, raw_len: int, blob: bytes) -> None:
@@ -338,14 +348,13 @@ class CompressWriter:
         stream."""
         if self._closed:
             return
-        if self._pending is not None:
-            _, fut = self._pending
+        while self._pending:
+            _, fut = self._pending.popleft()
             fut.cancel()
             try:
                 fut.result()            # wait out an already-running frame
             except BaseException:
                 pass                    # discarded either way
-            self._pending = None
         if self._pipe is not None:
             self._pipe.shutdown(wait=True)
             self._pipe = None
@@ -372,10 +381,11 @@ class DecompressReader:
     Frame CRCs are verified before decode; a truncated stream (no end frame)
     raises ``IOError``.
 
-    With ``threads > 1`` the reader **prefetches**: frame k decodes on a
-    dedicated pipeline thread (chunk work items on the engine pool) while
-    frame k+1's bytes are read and CRC-checked from the file — IO and codec
-    overlap, one frame in flight, decoded stream unchanged.
+    With ``threads > 1`` the reader **prefetches**: up to
+    ``pipeline_depth`` frames decode concurrently on dedicated pipeline
+    threads (chunk work items on the engine pool) while later frames'
+    bytes are read and CRC-checked from the file — IO and codec overlap,
+    frames resolved strictly in stream order, decoded stream unchanged.
 
     ``backend`` selects the decode back half per frame ('host' | 'device'
     | 'auto' — see ``core/device_unplane.py``) and ``entropy_backend``
@@ -393,6 +403,7 @@ class DecompressReader:
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
         options: Optional[CodecOptions] = None,
+        pipeline_depth: int = 2,
     ):
         from . import zipnn
 
@@ -400,10 +411,15 @@ class DecompressReader:
             options, threads=threads, backend=backend,
             entropy_backend=entropy_backend,
         )
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}"
+            )
         self._config = zipnn.DEFAULT if config is None else config
         self._threads = self._config.threads if opts.threads is None else opts.threads
         self._backend = opts.backend
         self._entropy_backend = opts.entropy_backend
+        self._depth = pipeline_depth
         self._fp, self._own = _open(fp, "rb")
         hdr = self._fp.read(_SHDR.size)
         if len(hdr) < _SHDR.size:
@@ -436,15 +452,16 @@ class DecompressReader:
         skips data).
 
         When the engine is threaded, frame k's decode is submitted to a
-        dedicated pipeline thread and resolved only after frame k+1's bytes
-        have been read and CRC-checked — the prefetch double buffer.  All
-        validation (CRC before decode, per-frame length after decode, total
-        length at the end frame) is unchanged.
+        dedicated pipeline thread and resolved only after up to
+        ``pipeline_depth - 1`` later frames' bytes have been read and
+        CRC-checked — the prefetch ring.  Frames resolve strictly in
+        stream order, and all validation (CRC before decode, per-frame
+        length after decode, total length at the end frame) is unchanged.
         """
         use_pipe = resolve_threads(self._threads) > 1
         pipe: Optional[ThreadPoolExecutor] = None
         total = 0
-        pending = None                  # (future-or-blob, declared raw_len)
+        pending: deque = deque()        # (future-or-blob, declared raw_len)
 
         def resolve(p) -> bytes:
             nonlocal total
@@ -466,8 +483,8 @@ class DecompressReader:
                 if kind not in (_KIND_DATA, _KIND_END):
                     raise IOError(f"corrupt ZNS1 frame kind {kind}")
                 if kind == _KIND_END:
-                    last = resolve(pending) if pending is not None else None
-                    pending = None
+                    last = [resolve(p) for p in pending]
+                    pending.clear()
                     # the end frame records the total raw length: a stream
                     # with whole frames missing must not parse as complete
                     if total != raw_len:
@@ -475,8 +492,7 @@ class DecompressReader:
                             f"ZNS1 stream yielded {total} bytes, end frame "
                             f"declares {raw_len}"
                         )
-                    if last is not None:
-                        yield last
+                    yield from last
                     return
                 blob = _read_exact(self._fp, comp_len)
                 if len(blob) < comp_len:
@@ -485,12 +501,16 @@ class DecompressReader:
                     raise IOError("ZNS1 frame CRC mismatch")
                 if use_pipe and pipe is None:
                     pipe = ThreadPoolExecutor(
-                        max_workers=1, thread_name_prefix="zipnn-frame-pipe"
+                        max_workers=self._depth,
+                        thread_name_prefix="zipnn-frame-pipe",
                     )
-                nxt = (pipe.submit(self._decode, blob) if pipe else blob, raw_len)
-                if pending is not None:
-                    yield resolve(pending)
-                pending = nxt
+                pending.append(
+                    (pipe.submit(self._decode, blob) if pipe else blob, raw_len)
+                )
+                # Keep up to pipeline_depth frames in flight (1 when serial
+                # — the blob then decodes lazily at resolve, as before).
+                while len(pending) > (self._depth if pipe else 1):
+                    yield resolve(pending.popleft())
         finally:
             if pipe is not None:
                 pipe.shutdown(wait=False)
@@ -575,13 +595,15 @@ def compress_file(
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
     options: Optional[CodecOptions] = None,
+    pipeline_depth: int = 2,
 ) -> Tuple[int, int]:
     """Stream-compress ``src`` into a ``ZNS1`` container at ``dst``.
 
     Reads/compresses/writes one window at a time — peak extra memory is
     O(window), so checkpoints larger than RAM round-trip.  With threads the
-    read of window k+1 overlaps window k's compression (see
-    :class:`CompressWriter`).  Returns ``(raw_bytes, comp_bytes)``.
+    read of later windows overlaps up to ``pipeline_depth`` windows'
+    compression (see :class:`CompressWriter`).  Returns
+    ``(raw_bytes, comp_bytes)``.
     """
     opts = resolve_options(
         options, threads=threads, backend=backend,
@@ -592,6 +614,7 @@ def compress_file(
         with CompressWriter(
             dst, dtype_name, config,
             window_bytes=window_bytes, options=opts,
+            pipeline_depth=pipeline_depth,
         ) as w:
             while True:
                 data = fin.read(w._window)
@@ -613,6 +636,7 @@ def decompress_file(
     backend: Optional[str] = None,
     entropy_backend: Optional[str] = None,
     options: Optional[CodecOptions] = None,
+    pipeline_depth: int = 2,
 ) -> int:
     """Stream-decompress a ``ZNS1`` container; returns raw bytes written."""
     opts = resolve_options(
@@ -621,7 +645,9 @@ def decompress_file(
     )
     fout, own_out = _open(dst, "wb")
     try:
-        with DecompressReader(src, config, options=opts) as r:
+        with DecompressReader(
+            src, config, options=opts, pipeline_depth=pipeline_depth
+        ) as r:
             total = 0
             for raw in r.frames():
                 fout.write(raw)

@@ -94,6 +94,8 @@ __all__ = [
     "CodecOptions",
     "ZipNNSession",
     "CompressedTensor",
+    "ArrayFeed",
+    "build_array_feed",
     "compress_array",
     "decompress_array",
     "compress_bytes",
@@ -607,6 +609,100 @@ def decompress_array(
         ),
     )
     return np.frombuffer(raw, dtype=_np_dtype(ct.dtype)).reshape(ct.shape).copy()
+
+
+# ---------------------------------------------------------------------------
+# device-resident payload feed (per-leaf)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ArrayFeed:
+    """One leaf's device-resident decode plan: blob parsed once, payloads
+    resident in device memory, :meth:`decode` re-runs the fused decoder from
+    those buffers every call — zero host→device payload traffic per decode
+    (see :class:`repro.core.device_entropy.PayloadFeed`).
+
+    Build via :func:`build_array_feed`; residency changes wall-clock and
+    memory only — decoded arrays are bit-identical to
+    ``decompress_array(ct, device_resident=True)``.
+    """
+
+    dtype: str
+    shape: Tuple[int, ...]
+    _feed: Any
+    _layout: bitlayout.BitLayout
+
+    @property
+    def device_bytes(self) -> int:
+        """Resident HBM footprint of the compressed payload buffers."""
+        return self._feed.device_bytes
+
+    def decode(self) -> Any:
+        """The restored leaf as a device-resident ``jax.Array``."""
+        import jax
+        import jax.numpy as jnp
+
+        from . import device_unplane
+
+        planes = self._feed.decode()
+        elems = device_unplane.consume_planes(
+            planes, self._layout, device_resident=True
+        )
+        return jax.lax.bitcast_convert_type(
+            elems, jnp.dtype(_np_dtype(self.dtype))
+        ).reshape(self.shape)
+
+
+def build_array_feed(
+    ct: CompressedTensor,
+    config: ZipNNConfig = DEFAULT,
+    *,
+    options: Optional[CodecOptions] = None,
+) -> Optional[ArrayFeed]:
+    """Parse one leaf's blob into a device-resident :class:`ArrayFeed`.
+
+    The container parse, CRC + cursor integrity checks, word packing and
+    payload upload all happen **here, once**; every later
+    :meth:`ArrayFeed.decode` drives the fused decoder + consumer straight
+    from device memory.  Returns ``None`` when the leaf cannot ride the
+    device path end to end (unsupported layout, empty leaf, tail bytes,
+    chunk geometry the kernels cannot decode, or no jax) — callers fall
+    back to the per-call decode, which is always available.
+
+    ``options`` carries the thread knob for the build-time host work items
+    (non-HUFF chunk decode + CRC fan-out); it cannot change decoded bits.
+    """
+    opts = _resolve_options(options)
+    layout = bitlayout.LAYOUTS.get(ct.dtype)
+    if layout is None or not int(np.prod(ct.shape, dtype=np.int64)):
+        return None
+    from . import device_entropy, device_unplane
+
+    if not device_unplane.supports(layout):
+        return None
+    meta, mv = container.unpack_stream(ct.blob)
+    if meta.layout_name != layout.name:
+        return None
+    if not device_entropy.supports_decode(meta.chunk_bytes):
+        return None
+    end = meta.payload_base + sum(e.comp_len for pe in meta.entries for e in pe)
+    if ct.blob[end:]:
+        return None                            # tail bytes ride the host path
+    if not meta.entries or not sum(e.raw_len for e in meta.entries[0]):
+        return None
+    payload_lists = [
+        [
+            container.payload_view(meta, mv, p, c)
+            for c in range(len(meta.entries[p]))
+        ]
+        for p in range(meta.n_planes)
+    ]
+    params = codec.CodecParams(chunk_bytes=meta.chunk_bytes, backend=config.backend)
+    pool = engine.get_pool(config.threads if opts.threads is None else opts.threads)
+    feed = device_entropy.PayloadFeed(
+        meta.entries, payload_lists, meta.tables, params, pool=pool
+    )
+    return ArrayFeed(ct.dtype, tuple(ct.shape), feed, layout)
 
 
 def compress_pytree(

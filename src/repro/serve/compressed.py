@@ -41,7 +41,7 @@ from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import numpy as np
 
-from repro.core import zipnn
+from repro.core import codec, zipnn
 from repro.core.options import resolve_options
 
 PyTree = Any
@@ -67,6 +67,7 @@ class CompressedParamStore:
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
+        payload_feed: bool = False,
     ) -> None:
         opts = resolve_options(
             options, threads=threads, backend=backend,
@@ -77,8 +78,12 @@ class CompressedParamStore:
         self._threads = opts.threads
         self._backend = opts.backend
         self._entropy_backend = opts.entropy_backend
+        self.payload_feed = payload_feed
         self.static: Dict[str, PyTree] = {}
         self._stacks: Dict[str, List[Dict[str, Any]]] = {}
+        # payload_feed=True: per-layer, per-leaf ArrayFeeds (None where a
+        # leaf is feed-ineligible and rides the per-call decode instead).
+        self._feeds: Dict[str, List[List[Optional[zipnn.ArrayFeed]]]] = {}
         self._lock = threading.Lock()
         self._resident: set = set()
         self.peak_resident = 0
@@ -96,6 +101,7 @@ class CompressedParamStore:
         threads: Optional[int] = None,
         backend: Optional[str] = None,
         entropy_backend: Optional[str] = None,
+        payload_feed: bool = False,
     ) -> "CompressedParamStore":
         """Compress ``params``' stacked-layer subtrees into a store.
 
@@ -105,6 +111,13 @@ class CompressedParamStore:
         ``store.static``.  Compression is deterministic, so two stores
         built from the same params hold byte-identical payloads on any
         backend/threads combination.
+
+        ``payload_feed=True`` additionally parses every layer's payloads
+        into device-resident :class:`~repro.core.zipnn.ArrayFeed` plans
+        (:func:`~repro.core.zipnn.build_array_feed`) — the compressed words
+        upload to HBM **here, once**, and every later ring decode runs with
+        zero host→device payload traffic.  Leaves a feed cannot cover ride
+        the per-call decode path; decoded bits are identical either way.
         """
         import jax
 
@@ -118,6 +131,7 @@ class CompressedParamStore:
                 options, threads=threads, backend=backend,
                 entropy_backend=entropy_backend, _stacklevel=3,
             ),
+            payload_feed=payload_feed,
         )
         keys = DEFAULT_STACK_KEYS if stack_keys is None else stack_keys
         for key, sub in params.items():
@@ -136,24 +150,59 @@ class CompressedParamStore:
                 )
                 for i in range(n)
             ]
+            if payload_feed:
+                store._feeds[key] = [
+                    [
+                        zipnn.build_array_feed(
+                            ct, store._config, options=store._options
+                        )
+                        for ct in manifest["leaves"]
+                    ]
+                    for manifest in store._stacks[key]
+                ]
         return store
 
     # -- decode / residency ------------------------------------------------
 
-    def decode_layer(self, key: str, i: int) -> PyTree:
-        """Decode layer ``i`` of stack ``key`` into a ring slot.
-
-        One batched ``decompress_pytree(..., device_resident=True)`` call:
-        bit-identical leaves on every backend combo; device-resolved leaves
-        stay on device with zero host bounce.  Marks the slot resident —
-        the caller owns it until :meth:`release`.
-        """
-        manifest = self._stacks[key][i]
-        tree = zipnn.decompress_pytree(
-            manifest,
+    def _decode_leaf(self, key: str, i: int, j: int) -> Any:
+        """Decode leaf ``j`` of layer ``i`` — feed path when a feed covers
+        it, per-call decode otherwise; bit-identical either way."""
+        feeds = self._feeds.get(key)
+        if feeds is not None:
+            feed = feeds[i][j]
+            if feed is not None:
+                return feed.decode()
+        return zipnn.decompress_array(
+            self._stacks[key][i]["leaves"][j],
             self._config,
             options=self._options.replace(device_resident=True),
         )
+
+    def decode_layer(self, key: str, i: int) -> PyTree:
+        """Decode layer ``i`` of stack ``key`` into a ring slot.
+
+        One batched ``decompress_pytree(..., device_resident=True)`` call
+        (or, with ``payload_feed=True``, per-leaf fused decodes straight
+        from the resident payload buffers — zero host→device payload
+        traffic): bit-identical leaves on every backend combo;
+        device-resolved leaves stay on device with zero host bounce.
+        Marks the slot resident — the caller owns it until :meth:`release`.
+        """
+        import jax
+
+        manifest = self._stacks[key][i]
+        if key in self._feeds:
+            arrays = [
+                self._decode_leaf(key, i, j)
+                for j in range(len(manifest["leaves"]))
+            ]
+            tree = jax.tree_util.tree_unflatten(manifest["treedef"], arrays)
+        else:
+            tree = zipnn.decompress_pytree(
+                manifest,
+                self._config,
+                options=self._options.replace(device_resident=True),
+            )
         with self._lock:
             self._resident.add((key, i))
             self.peak_resident = max(self.peak_resident, len(self._resident))
@@ -164,6 +213,54 @@ class CompressedParamStore:
         buffers themselves die when the layer's compute finishes)."""
         with self._lock:
             self._resident.discard((key, i))
+
+    # -- per-tile decode ---------------------------------------------------
+
+    def n_leaves(self, key: str) -> int:
+        """Leaves per layer of stack ``key`` (constant across its layers)."""
+        return len(self._stacks[key][0]["leaves"])
+
+    def tile_leaf_ids(self, key: str, t: int, tiles: int) -> range:
+        """Leaf indices of tile ``t`` when a layer splits into ``tiles``
+        contiguous tensor-groups (``codec.split_ids`` geometry — trailing
+        tiles may be empty when a layer has fewer leaves than tiles)."""
+        ranges = codec.split_ids(self.n_leaves(key), tiles)
+        return ranges[t] if t < len(ranges) else range(0)
+
+    def decode_layer_tile(
+        self, key: str, i: int, t: int, tiles: int
+    ) -> Dict[int, Any]:
+        """Decode tile ``t`` of layer ``i`` — one contiguous tensor-group.
+
+        Returns ``{leaf_index: array}`` for the tile's leaves (empty for
+        trailing empty tiles) and marks one *tile slot* resident, so
+        ``peak_resident`` counts tile-granular residency: a ring of
+        ``ring`` layers split ``tiles`` ways holds at most ``ring × tiles``
+        tile slots.  Tiling changes scheduling and residency only — the
+        reassembled layer (:meth:`layer_unflatten`) is leaf-for-leaf
+        identical to :meth:`decode_layer`.
+        """
+        arrays = {
+            j: self._decode_leaf(key, i, j)
+            for j in self.tile_leaf_ids(key, t, tiles)
+        }
+        with self._lock:
+            self._resident.add((key, i, t, tiles))
+            self.peak_resident = max(self.peak_resident, len(self._resident))
+        return arrays
+
+    def release_tile(self, key: str, i: int, t: int, tiles: int) -> None:
+        """Tile twin of :meth:`release`."""
+        with self._lock:
+            self._resident.discard((key, i, t, tiles))
+
+    def layer_unflatten(self, key: str, i: int, arrays: List[Any]) -> PyTree:
+        """Reassemble a layer tree from its decoded leaves (in leaf order)."""
+        import jax
+
+        return jax.tree_util.tree_unflatten(
+            self._stacks[key][i]["treedef"], arrays
+        )
 
     @property
     def resident_count(self) -> int:
@@ -197,6 +294,18 @@ class CompressedParamStore:
     @property
     def ratio_pct(self) -> float:
         return 100.0 * self.comp_bytes / max(1, self.raw_bytes)
+
+    @property
+    def device_payload_bytes(self) -> int:
+        """HBM resident bytes held by the payload feeds (0 when
+        ``payload_feed=False`` — payloads then live host-side at rest)."""
+        return sum(
+            feed.device_bytes
+            for layers in self._feeds.values()
+            for per_leaf in layers
+            for feed in per_leaf
+            if feed is not None
+        )
 
     @property
     def static_bytes(self) -> int:

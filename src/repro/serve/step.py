@@ -243,6 +243,7 @@ def make_compressed_serve_step(
     *,
     ring: int = 2,
     prefetch: bool = True,
+    tiles: int = 1,
     kv_store=None,
 ) -> Callable:
     """Compressed-resident decode step over a ``CompressedParamStore``.
@@ -276,6 +277,18 @@ def make_compressed_serve_step(
     caches (bit-identical arrays), and the post-loop slot write becomes
     ``kv_store.append``.  Everything compressible at serve time — weights
     at rest AND cold cache — is then ZNN1 payloads.
+
+    ``tiles`` sets the decode *granularity*: with ``tiles > 1`` each layer
+    splits into ``tiles`` contiguous tensor-groups
+    (``store.decode_layer_tile``) that decode as independent ring jobs —
+    a layer's first tensor-group is decoded and resident while its last
+    group is still in the decoder, and the next layer's first tiles start
+    decoding before the current layer's tail tiles are consumed.  Peak
+    decoded residency is accounted per tile slot: at most ``ring × tiles``
+    tile slots (each roughly ``1/tiles`` of a layer) instead of ``ring``
+    whole layers.  Tiling changes scheduling and residency only — the
+    reassembled layer is leaf-for-leaf identical, so logits stay
+    bit-identical to ``model.decode_step``.
     """
     import jax.numpy as jnp
     from concurrent.futures import ThreadPoolExecutor
@@ -292,6 +305,8 @@ def make_compressed_serve_step(
         raise ValueError(f"{cfg.name}: family {cfg.family!r} has no decode path")
     if ring < 1:
         raise ValueError(f"ring must be >= 1, got {ring}")
+    if tiles < 1:
+        raise ValueError(f"tiles must be >= 1, got {tiles}")
     if kv_store is not None and cfg.family == "ssm":
         raise NotImplementedError(
             f"{cfg.name}: ssm state has no cache-length axis to tier"
@@ -313,11 +328,25 @@ def make_compressed_serve_step(
         if (prefetch and ring > 1)
         else None
     )
-    depth = ring - 1 if executor is not None else 0
+    # Ring depth in decode-job units: jobs are whole layers (tiles == 1) or
+    # tile slots (tiles > 1) — either way the ring keeps ring-1 layers'
+    # worth of decode ahead of compute.
+    n_jobs = len(plan) * tiles
+    depth = (ring - 1) * tiles if executor is not None else 0
 
-    def _decode(j: int):
+    def _decode(n: int):
+        j, t = divmod(n, tiles)
         key, i, _ = plan[j]
-        return store.decode_layer(key, i)
+        if tiles == 1:
+            return store.decode_layer(key, i)
+        return store.decode_layer_tile(key, i, t, tiles)
+
+    def _release(key: str, i: int) -> None:
+        if tiles == 1:
+            store.release(key, i)
+        else:
+            for t in range(tiles):
+                store.release_tile(key, i, t, tiles)
 
     def serve_step(state, tokens):
         pos = state["pos"]
@@ -328,26 +357,41 @@ def make_compressed_serve_step(
         nxt = 0
 
         def pump() -> None:
-            # Keep up to ring-1 decodes ahead of compute; the worker fills
-            # the next slot while the current layer's matmuls run.
+            # Keep up to ring-1 layers' worth of decode jobs ahead of
+            # compute; the worker fills the next slot while the current
+            # layer's matmuls run.
             nonlocal nxt
             while (
                 executor is not None
-                and nxt < len(plan)
+                and nxt < n_jobs
                 and len(inflight) < depth
             ):
                 inflight.append(executor.submit(_decode, nxt))
                 nxt += 1
 
-        def layer_params(j: int):
+        def next_job(n: int):
             nonlocal nxt
             if inflight:
-                lp = inflight.pop(0).result()
+                out = inflight.pop(0).result()
             else:
-                lp = _decode(j)
-                nxt = j + 1
+                out = _decode(n)
+                nxt = n + 1
             pump()
-            return lp
+            return out
+
+        def layer_params(j: int):
+            if tiles == 1:
+                return next_job(j)
+            # Collect the layer's tiles in order; pump() between tiles so
+            # later layers' tiles enter the decoder as slots free up — the
+            # tile-granular overlap.
+            arrays: Dict[int, Any] = {}
+            for t in range(tiles):
+                arrays.update(next_job(j * tiles + t))
+            key, i, _ = plan[j]
+            return store.layer_unflatten(
+                key, i, [arrays[k] for k in sorted(arrays)]
+            )
 
         pump()
         if cfg.family == "ssm":
@@ -357,7 +401,7 @@ def make_compressed_serve_step(
                 x, (st, cv) = kinds[kind](
                     lp, x, state["ssm_state"][j], state["ssm_conv"][j], pos
                 )
-                store.release(key, i)
+                _release(key, i)
                 outs_s.append(st)
                 outs_c.append(cv)
             new_state["ssm_state"] = jnp.stack(outs_s)
@@ -368,7 +412,7 @@ def make_compressed_serve_step(
                 lp = layer_params(j)
                 c0j, c1j = kv_store.layer_caches(j)
                 x, (u0, u1) = kinds[kind](lp, x, c0j, c1j, pos)
-                store.release(key, i)
+                _release(key, i)
                 outs0.append(u0)
                 outs1.append(u1)
             # single post-loop cache write, exactly as decode_step — into
@@ -386,7 +430,7 @@ def make_compressed_serve_step(
             for j, (key, i, kind) in enumerate(plan):
                 lp = layer_params(j)
                 x, (u0, u1) = kinds[kind](lp, x, c0[j], c1[j], pos)
-                store.release(key, i)
+                _release(key, i)
                 outs0.append(u0)
                 outs1.append(u1)
             # single slot write for all layers, exactly as decode_step
@@ -404,6 +448,7 @@ def make_compressed_serve_step(
 
     serve_step.store = store
     serve_step.ring = ring
+    serve_step.tiles = tiles
     serve_step.kv_store = kv_store
     return serve_step
 

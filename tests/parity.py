@@ -9,7 +9,9 @@ byte-for-byte (format stability).  The encode side additionally sweeps
 ``entropy_backend`` (the fused device Huffman bit-pack stage,
 ``core/device_entropy.py``): blobs must stay byte-identical with the
 entropy stage on device, including on the canonical-coder configs where
-it actually engages.
+it actually engages.  Payload-resident rows additionally decode through
+the parse-once :class:`~repro.core.zipnn.ArrayFeed` and assert both bit
+equality and zero per-decode payload uploads.
 
 Importable from test modules (no ``test_`` prefix, so pytest does not
 collect it as a suite) and runnable standalone as the CI parity smoke:
@@ -129,6 +131,41 @@ def assert_decode_parity(
                 f"[{label}]"
             )
     return ref
+
+
+def assert_feed_parity(
+    raw: bytes,
+    dtype_name: str,
+    *,
+    config: Optional[zipnn.ZipNNConfig] = None,
+    label: str = "",
+) -> int:
+    """Device-resident payload feed parity: the parse-once/decode-many
+    :class:`~repro.core.zipnn.ArrayFeed` returns the same bytes as the
+    one-shot decoder, with **zero** per-decode payload uploads — payload
+    residency is a wall-clock/memory knob, never a bytes knob.
+
+    Returns 1 when a feed covered the stream, 0 when it fell back
+    (TAIL remainder, empty tensor, no device backend) — fallbacks are the
+    per-call decoder's job and already swept above."""
+    from repro.core import device_entropy
+
+    cfg = zipnn.DEFAULT if config is None else config
+    itemsize = np.dtype(NP_DTYPES[dtype_name]).itemsize
+    if not len(raw) or len(raw) % itemsize:
+        return 0
+    blob = zipnn.compress_bytes(raw, dtype_name, cfg)
+    ct = zipnn.CompressedTensor(blob, dtype_name, (len(raw) // itemsize,))
+    feed = zipnn.build_array_feed(ct, cfg)
+    if feed is None:
+        return 0
+    device_entropy.reset_transfer_stats()
+    out = as_bytes(np.asarray(feed.decode()))
+    assert out == raw, f"payload-feed decode not bit-exact [{label}]"
+    assert device_entropy.transfer_stats()["payload_uploads"] == 0, (
+        f"payload-feed decode moved payload bytes host→device [{label}]"
+    )
+    return 1
 
 
 def assert_delta_parity(
@@ -254,6 +291,14 @@ def sweep(
                         label=label + " huff",
                     )
                     cases += 1
+                    # payload-resident rows: HUFF words resident (huffman
+                    # coder) and pure-splice resident (zlib coder)
+                    cases += assert_feed_parity(
+                        raw, dtype, config=cfg_huff, label=label + " feed"
+                    )
+                    cases += assert_feed_parity(
+                        raw, dtype, config=cfg, label=label + " feed-zlib"
+                    )
                 if verbose:
                     print(f"  ok: {label}")
             if deltas and n:
